@@ -1,0 +1,103 @@
+"""Tables 4-8: MAE per kernel-variant-hardware combo, aggregated MAPE.
+
+Runs the paper's exact protocol over the 40-combo portability matrix
+(simulated devices; DESIGN.md §3) and the measured host-anchor combos:
+500 instances, 250 train / 250 test, five methods.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.core.nnc import make_model, mae, mape, slice_features
+from repro.perfdata.datasets import (Combo, generate, host_combos,
+                                     paper_combos, train_test_split)
+
+METHODS = ("nnc", "nn", "cons", "lr", "nlr")
+
+
+def run_combo(combo: Combo, epochs: int, seed: int = 0) -> dict:
+    X, y, names = generate(combo, n=500, seed=seed)
+    (trX, trY), (teX, teY) = train_test_split(X, y)
+    mm_cpu = combo.kernel == "mm" and combo.is_cpu
+    out = {}
+    for method in METHODS:
+        t0 = time.time()
+        model, uses_c = make_model(method, X.shape[1], mm_cpu=mm_cpu,
+                                   epochs=epochs, seed=seed)
+        model.fit(slice_features(trX, uses_c), trY)
+        pred = model.predict(slice_features(teX, uses_c))
+        out[method] = {
+            "mae": mae(teY, pred),
+            "mape": mape(teY, pred),
+            "n_params": getattr(model, "n_params", 0),
+            "train_s": round(time.time() - t0, 2),
+        }
+    return out
+
+
+def run(epochs: int = 20000, include_host: bool = True,
+        out_path: str = "results/paper_tables.json",
+        combos: list | None = None) -> dict:
+    todo = combos if combos is not None else list(paper_combos())
+    if include_host and combos is None:
+        todo += host_combos()
+    results = {}
+    if os.path.exists(out_path):
+        with open(out_path) as f:
+            results = json.load(f)
+    for combo in todo:
+        if combo.key in results:
+            continue
+        t0 = time.time()
+        results[combo.key] = run_combo(combo, epochs)
+        os.makedirs(os.path.dirname(out_path), exist_ok=True)
+        with open(out_path, "w") as f:
+            json.dump(results, f, indent=1)
+        best = min(results[combo.key], key=lambda m: results[combo.key][m]["mae"])
+        print(f"[tables] {combo.key:28s} ({time.time()-t0:5.1f}s) "
+              + " ".join(f"{m}:{results[combo.key][m]['mae']:.2e}"
+                         for m in METHODS)
+              + f"  best={best}")
+    return results
+
+
+def summarize(results: dict) -> list[str]:
+    """Table 4-7 style rows (MAE) + Table 8 aggregation (MAPE)."""
+    lines = []
+    kernels = sorted({k.split("|")[0] for k in results})
+    lines.append("== Tables 4-7: MAE (seconds) per combo ==")
+    for kernel in kernels:
+        lines.append(f"-- {kernel.upper()} --")
+        header = f"{'combo':28s}" + "".join(f"{m:>12s}" for m in METHODS)
+        lines.append(header)
+        for key in sorted(k for k in results if k.startswith(kernel + "|")):
+            row = results[key]
+            lines.append(f"{key:28s}" + "".join(
+                f"{row[m]['mae']:12.3e}" for m in METHODS))
+    lines.append("")
+    lines.append("== Table 8: aggregated MAPE (%) ==")
+    groups: dict[str, dict[str, list]] = {}
+    for key, row in results.items():
+        kernel, _, device = key.split("|")
+        hw = "GPU" if device in ("tesla", "quadro") else "CPU"
+        for g in (kernel.upper(), hw):
+            groups.setdefault(g, {})
+            for m in METHODS:
+                groups[g].setdefault(m, []).append(row[m]["mape"])
+    header = f"{'group':10s}" + "".join(f"{m:>10s}" for m in METHODS)
+    lines.append(header)
+    for g in sorted(groups):
+        lines.append(f"{g:10s}" + "".join(
+            f"{np.mean(groups[g][m]):10.1f}" for m in METHODS))
+    # win-rate of NN+C vs NN (the paper's headline ordering)
+    wins = sum(1 for row in results.values()
+               if row["nnc"]["mae"] <= row["nn"]["mae"])
+    lines.append(f"\nNN+C beats NN (MAE) on {wins}/{len(results)} combos; "
+                 f"overall MAPE nnc="
+                 f"{np.mean([r['nnc']['mape'] for r in results.values()]):.1f}% "
+                 f"nn={np.mean([r['nn']['mape'] for r in results.values()]):.1f}%")
+    return lines

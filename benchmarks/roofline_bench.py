@@ -1,0 +1,45 @@
+"""§Roofline report: renders the dry-run artifact (results/dryrun.json)
+into the per-(arch x shape x mesh) three-term table."""
+from __future__ import annotations
+
+import json
+import os
+
+
+def run(path: str = "results/dryrun.json") -> dict:
+    if not os.path.exists(path):
+        print(f"[roofline] {path} missing — run "
+              "`python -m repro.launch.dryrun --all --both-meshes` first")
+        return {}
+    with open(path) as f:
+        return json.load(f)
+
+
+def summarize(results: dict, mesh: str = "pod16x16") -> list[str]:
+    lines = [f"== Roofline terms per (arch x shape), mesh={mesh} "
+             f"(trip-count-corrected analytic model) =="]
+    lines.append(f"{'cell':42s} {'compute':>10s} {'memory':>10s} "
+                 f"{'collect':>10s} {'bneck':>10s} {'useful':>7s} {'mem/dev':>8s}")
+    skips = []
+    for key in sorted(results):
+        v = results[key]
+        if not key.endswith(mesh):
+            continue
+        cell = key.rsplit("|", 1)[0]
+        if v.get("skipped"):
+            skips.append(f"{cell}: SKIP ({v['reason']})")
+            continue
+        if not v.get("ok"):
+            lines.append(f"{cell:42s} FAILED: {v.get('error','')[:40]}")
+            continue
+        mb = (v.get("memory_per_device_bytes") or {}).get("total_bytes", 0) / 1e9
+        lines.append(
+            f"{cell:42s} {v['compute_s']*1e3:9.1f}m {v['memory_s']*1e3:9.1f}m "
+            f"{v['collective_s']*1e3:9.1f}m {v['bottleneck']:>10s} "
+            f"{v['useful_ratio']:7.2f} {mb:7.1f}G")
+    lines.extend(skips)
+    multi = sum(1 for k, v in results.items()
+                if k.endswith("pod2x16x16") and v.get("ok")
+                and not v.get("skipped"))
+    lines.append(f"multi-pod (2x16x16) compiled cells: {multi}")
+    return lines

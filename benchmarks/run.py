@@ -1,0 +1,91 @@
+"""Benchmark harness — one function per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run            # standard pass
+    PYTHONPATH=src python -m benchmarks.run --quick    # subset, low epochs
+    PYTHONPATH=src python -m benchmarks.run --full     # all 48 combos
+
+Prints ``name,value,derived`` CSV lines at the end for machine scraping;
+full tables go to stdout and results/*.json (consumed by EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+import numpy as np
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args(argv)
+
+    from benchmarks import paper_tables, roofline_bench, unconstrained, \
+        variant_selection
+    from repro.perfdata.datasets import Combo, host_combos, paper_combos
+
+    epochs = 4000 if args.quick else 20000
+    if args.quick:
+        combos = [Combo("mm", "eigen", "i5", True),
+                  Combo("mv", "cuda_global", "tesla", True),
+                  Combo("mp", "eigen", "xeon", True)]
+        tables = paper_tables.run(epochs=epochs, combos=combos)
+    elif args.full:
+        tables = paper_tables.run(epochs=epochs, include_host=True)
+    else:
+        tables = paper_tables.run(epochs=epochs, include_host=True)
+
+    print()
+    for line in paper_tables.summarize(tables):
+        print(line)
+
+    if not args.quick:
+        unc = unconstrained.run(epochs=epochs)
+        print()
+        for line in unconstrained.summarize(unc):
+            print(line)
+
+        vs = variant_selection.run()
+        print()
+        for line in variant_selection.summarize(vs):
+            print(line)
+
+    if args.full:
+        from benchmarks import omitted_kernels
+        ok_res = omitted_kernels.run(epochs=epochs)
+        print()
+        for line in omitted_kernels.summarize(ok_res):
+            print(line)
+
+    roof = roofline_bench.run()
+    if roof:
+        print()
+        for line in roofline_bench.summarize(roof):
+            print(line)
+
+    # machine-readable trailer: name,us_per_call,derived
+    print()
+    print("name,us_per_call,derived")
+    nnc_mae = np.mean([r["nnc"]["mae"] for r in tables.values()])
+    nn_mae = np.mean([r["nn"]["mae"] for r in tables.values()])
+    nnc_mape = np.mean([r["nnc"]["mape"] for r in tables.values()])
+    wins = sum(1 for r in tables.values() if r["nnc"]["mae"] <= r["nn"]["mae"])
+    print(f"table4_7_nnc_mean_mae_s,{nnc_mae:.6e},lower_is_better")
+    print(f"table4_7_nn_mean_mae_s,{nn_mae:.6e},baseline")
+    print(f"table8_nnc_mean_mape_pct,{nnc_mape:.2f},paper_reports_13pct")
+    print(f"nnc_vs_nn_mae_winrate,{wins}/{len(tables)},paper_reports_all")
+    if not args.quick:
+        try:
+            sp = max(r["speedup_vs_default"]
+                     for r in vs["cases"].values())
+            print(f"fig4_blur_max_speedup,{sp:.3f},paper_reports_1.5x")
+        except Exception:
+            pass
+    if roof:
+        ok = sum(1 for k, v in roof.items() if v.get("ok"))
+        print(f"dryrun_cells_ok,{ok},both_meshes")
+
+
+if __name__ == "__main__":
+    main()

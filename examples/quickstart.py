@@ -1,0 +1,52 @@
+"""Quickstart: the two halves of the framework in ~60 seconds.
+
+1. Train an NN+C performance predictor on a kernel-variant-hardware combo
+   and use it to select the fastest variant (the paper's contribution).
+2. Train a (reduced) assigned-architecture LM for a few steps through the
+   production train step (the substrate the predictor drives).
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import numpy as np
+
+from repro.core.nnc import make_model, mape, slice_features
+from repro.perfdata.datasets import Combo, generate, train_test_split
+
+
+def nnc_demo():
+    print("== 1. NN+C performance prediction (mv / eigen / i7) ==")
+    combo = Combo("mv", "eigen", "i7", simulated=True)
+    X, y, names = generate(combo, n=500, seed=0, cache_dir=None)
+    (trX, trY), (teX, teY) = train_test_split(X, y)
+    model, uses_c = make_model("nnc", X.shape[1], epochs=12000)
+    model.fit(slice_features(trX, uses_c), trY)
+    pred = model.predict(slice_features(teX, uses_c))
+    print(f"features: {names}")
+    print(f"NN+C ({model.n_params} params): test MAPE "
+          f"{mape(teY, pred):.1f}%  (paper regime: ~13%)")
+
+
+def lm_demo():
+    print("\n== 2. Reduced gemma3-1b through the production train step ==")
+    from repro.configs import get_arch
+    from repro.models import build_model
+    from repro.optim.adamw import AdamW
+    from repro.train.step import TrainStepConfig, make_train_step
+    from repro.data.pipeline import DataConfig, Pipeline
+
+    cfg = get_arch("gemma3-1b").reduced()
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    opt = AdamW(learning_rate=1e-3)
+    opt_state = opt.init(params)
+    step = jax.jit(make_train_step(model, opt, TrainStepConfig(ce_seq_chunk=32)))
+    pipe = Pipeline(DataConfig(cfg.vocab_size, seq_len=64, global_batch=4))
+    for i in range(5):
+        params, opt_state, metrics = step(params, opt_state, pipe.next_batch())
+        print(f"step {i+1}: loss={float(metrics['loss']):.4f}")
+
+
+if __name__ == "__main__":
+    nnc_demo()
+    lm_demo()

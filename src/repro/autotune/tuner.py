@@ -1,0 +1,81 @@
+"""NN+C-driven schedule autotuning for the framework's own kernels.
+
+This is the paper's variant-selection loop closed over *our* variant axis:
+a Pallas/chunked-attention schedule (q_chunk, k_chunk) is a variant; the
+feature vector is (B, H, S, D, q_chunk, k_chunk, c=attention FLOPs); the
+lightweight NN+C model is trained on measured step times and then ranks
+candidate schedules for unseen shapes at compile time.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import time
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.nnc import MLPModel, lightweight_dims
+from repro.core.selection import VariantSelector
+from repro.models.attention import attend_chunked
+
+SCHEDULES = [(q, k) for q in (64, 128, 256, 512) for k in (128, 256, 512, 1024)]
+
+
+def attention_flops(b: int, h: int, s: int, d: int) -> float:
+    return 4.0 * b * h * s * s * d      # qk^T + pv
+
+
+def _features(b, h, s, d, qc, kc):
+    return [b, h, s, d, qc, kc, attention_flops(b, h, s, d)]
+
+
+def measure_schedule(b, h, s, d, qc, kc, reps: int = 2,
+                     rng: Optional[np.random.RandomState] = None) -> float:
+    rng = rng or np.random.RandomState(0)
+    q = jnp.asarray(rng.randn(b, s, h, d) * 0.3, jnp.float32)
+    k = jnp.asarray(rng.randn(b, s, h, d) * 0.3, jnp.float32)
+    v = jnp.asarray(rng.randn(b, s, h, d), jnp.float32)
+    fn = jax.jit(lambda q, k, v: attend_chunked(
+        q, k, v, causal=True, k_chunk=kc, q_chunk=qc))
+    fn(q, k, v).block_until_ready()
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn(q, k, v).block_until_ready()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+@dataclasses.dataclass
+class AttentionTuner:
+    model: Optional[MLPModel] = None
+
+    def collect(self, shapes: Sequence[tuple], schedules=None,
+                verbose: bool = False) -> tuple[np.ndarray, np.ndarray]:
+        schedules = schedules or SCHEDULES
+        rng = np.random.RandomState(0)
+        X, y = [], []
+        for (b, h, s, d) in shapes:
+            for (qc, kc) in schedules:
+                t = measure_schedule(b, h, s, d, qc, kc, rng=rng)
+                X.append(_features(b, h, s, d, qc, kc))
+                y.append(t)
+                if verbose:
+                    print(f"  ({b},{h},{s},{d}) qc={qc} kc={kc}: {t*1e3:.1f}ms")
+        return np.asarray(X), np.asarray(y)
+
+    def fit(self, X: np.ndarray, y: np.ndarray) -> "AttentionTuner":
+        self.model = MLPModel(lightweight_dims(X.shape[1], 75, 1),
+                              epochs=25000)
+        self.model.fit(X, y)
+        return self
+
+    def best_schedule(self, b, h, s, d, schedules=None) -> tuple[int, int]:
+        schedules = schedules or SCHEDULES
+        cands = np.asarray([_features(b, h, s, d, qc, kc)
+                            for qc, kc in schedules])
+        idx = VariantSelector(self.model).select(cands)
+        return schedules[idx]

@@ -1,0 +1,24 @@
+"""DeepSeek 67B — dense llama-style GQA transformer.
+
+[arXiv:2401.02954; hf]  95L d_model=8192 64H (GQA kv=8) d_ff=22016
+vocab=102400, SwiGLU, RMSNorm, untied embeddings.
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="deepseek-67b",
+    family="dense",
+    n_layers=95,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    d_ff=22016,
+    vocab_size=102400,
+    head_dim=128,
+    mlp_kind="swiglu",
+    norm_kind="rmsnorm",
+    rope_theta=10000.0,
+    tie_embeddings=False,
+    layer_pattern=("attn",),
+    subquadratic=False,
+)

@@ -1,0 +1,64 @@
+"""Kernel-DAG -> heterogeneous-device mapping from predicted times (§1).
+
+The paper's motivating example: two independent matmuls, a CPU and a GPU —
+the small one must take the CPU so the GPU is free for the big one, which
+only falls out of *absolute time* predictions, not per-kernel winners.
+Greedy earliest-finish-time list scheduling over predicted times, honouring
+DAG dependencies.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Sequence
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelTask:
+    name: str
+    kernel: str
+    params: dict
+    deps: tuple = ()
+
+
+@dataclasses.dataclass
+class Assignment:
+    device: str
+    start: float
+    finish: float
+
+
+def schedule(tasks: Sequence[KernelTask],
+             predict: Callable[[KernelTask, str], float],
+             devices: Sequence[str]) -> dict[str, Assignment]:
+    """predict(task, device) -> seconds.  Returns task -> Assignment."""
+    by_name = {t.name: t for t in tasks}
+    done: dict[str, Assignment] = {}
+    device_free = {d: 0.0 for d in devices}
+    remaining = list(tasks)
+    while remaining:
+        ready = [t for t in remaining if all(d in done for d in t.deps)]
+        if not ready:
+            raise ValueError("dependency cycle in kernel DAG")
+        # pick the ready task with the LARGEST minimal predicted time first
+        # (longest-processing-time heuristic) ...
+        ready.sort(key=lambda t: -min(predict(t, d) for d in devices))
+        task = ready[0]
+        best = None
+        for dev in devices:
+            t_pred = predict(task, dev)
+            start = max(device_free[dev],
+                        max((done[d].finish for d in task.deps), default=0.0))
+            finish = start + t_pred
+            if best is None or finish < best[1].finish:
+                best = (dev, Assignment(dev, start, finish))
+        dev, assign = best
+        device_free[dev] = assign.finish
+        done[task.name] = assign
+        remaining.remove(task)
+    return done
+
+
+def makespan(assignments: dict[str, Assignment]) -> float:
+    return max(a.finish for a in assignments.values())

@@ -1,0 +1,21 @@
+"""Public conv2d op: pads the *output* grid to block multiples."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.conv2d import conv2d as _kernel
+from repro.kernels.conv2d import ref as _ref
+
+
+def conv2d(a: jax.Array, w: jax.Array, *, bm: int = 128, bn: int = 128,
+           use_kernel: bool = True, interpret: bool = True) -> jax.Array:
+    if not use_kernel:
+        return _ref.conv2d(a, w)
+    m, n = a.shape
+    r = w.shape[0]
+    om, on = m - r + 1, n - r + 1
+    pm, pn = (-om) % bm, (-on) % bn
+    ap = jnp.pad(a, ((0, pm), (0, pn))) if (pm or pn) else a
+    out = _kernel.conv2d(ap, w, bm=bm, bn=bn, interpret=interpret)
+    return out[:om, :on]

@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for valid 2-D cross-correlation."""
+import jax.numpy as jnp
+
+
+def conv2d(a, w):
+    m, n = a.shape
+    r = w.shape[0]
+    om, on = m - r + 1, n - r + 1
+    acc = jnp.zeros((om, on), jnp.float32)
+    for di in range(r):
+        for dj in range(r):
+            acc = acc + a[di:di + om, dj:dj + on].astype(jnp.float32) * \
+                float(1) * w[di, dj].astype(jnp.float32)
+    return acc.astype(a.dtype)

@@ -1,0 +1,25 @@
+"""Pure-jnp oracle: naive GQA attention with causal/window masks."""
+import jax.numpy as jnp
+
+
+def attention(q, k, v, *, causal=True, window=0):
+    """q: [B,H,Sq,D]; k,v: [B,KV,Sk,D]."""
+    b, h, sq, d = q.shape
+    kv = k.shape[1]
+    group = h // kv
+    k = jnp.repeat(k, group, axis=1)
+    v = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (d ** -0.5)
+    qp = jnp.arange(sq)[:, None]
+    kp = jnp.arange(k.shape[2])[None, :]
+    ok = jnp.ones((sq, k.shape[2]), bool)
+    if causal:
+        ok &= kp <= qp
+    if window > 0:
+        ok &= qp - kp < window
+    s = jnp.where(ok[None, None], s, -1e30)
+    p = jnp.exp(s - s.max(axis=-1, keepdims=True))
+    p = p / jnp.maximum(p.sum(axis=-1, keepdims=True), 1e-30)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32)
+                      ).astype(q.dtype)

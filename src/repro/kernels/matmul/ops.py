@@ -1,0 +1,22 @@
+"""Public matmul op: pads to block multiples, dispatches kernel or oracle."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.matmul import matmul as _kernel
+from repro.kernels.matmul import ref as _ref
+
+
+def matmul(a: jax.Array, b: jax.Array, *, bm: int = 128, bn: int = 128,
+           bk: int = 128, use_kernel: bool = True,
+           interpret: bool = True) -> jax.Array:
+    if not use_kernel:
+        return _ref.matmul(a, b)
+    m, k = a.shape
+    _, n = b.shape
+    pm, pn, pk = (-m) % bm, (-n) % bn, (-k) % bk
+    ap = jnp.pad(a, ((0, pm), (0, pk))) if (pm or pk) else a
+    bp = jnp.pad(b, ((0, pk), (0, pn))) if (pk or pn) else b
+    out = _kernel.matmul(ap, bp, bm=bm, bn=bn, bk=bk, interpret=interpret)
+    return out[:m, :n]

@@ -1,0 +1,7 @@
+"""Pure-jnp oracle for the matvec kernel."""
+import jax.numpy as jnp
+
+
+def matvec(a, x):
+    return jnp.dot(a, x.astype(a.dtype),
+                   preferred_element_type=jnp.float32).astype(a.dtype)

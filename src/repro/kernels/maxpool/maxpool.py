@@ -1,0 +1,47 @@
+"""Max-pooling Pallas kernel (window r, stride s), output-tiled.
+
+Same halo'd-window pattern as conv2d: grid over output tiles, strided
+loads per tap offset, running max in registers.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _mp_kernel(r, s, bm, bn, a_ref, o_ref):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    row0 = i * bm * s
+    col0 = j * bn * s
+    span_m = (bm - 1) * s + r
+    span_n = (bn - 1) * s + r
+    tile = pl.load(a_ref, (pl.dslice(row0, span_m), pl.dslice(col0, span_n)))
+    acc = jnp.full((bm, bn), -jnp.inf, jnp.float32)
+    for di in range(r):
+        for dj in range(r):
+            sub = jax.lax.slice(tile, (di, dj),
+                                (di + (bm - 1) * s + 1, dj + (bn - 1) * s + 1),
+                                (s, s))
+            acc = jnp.maximum(acc, sub.astype(jnp.float32))
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("r", "s", "bm", "bn", "interpret"))
+def maxpool(a: jax.Array, *, r: int, s: int, bm: int = 128, bn: int = 128,
+            interpret: bool = True) -> jax.Array:
+    m, n = a.shape
+    om, on = (m - r) // s + 1, (n - r) // s + 1
+    assert om % bm == 0 and on % bn == 0, (om, on, bm, bn)
+    kernel = functools.partial(_mp_kernel, r, s, bm, bn)
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((om, on), a.dtype),
+        grid=(om // bm, on // bn),
+        in_specs=[pl.BlockSpec(a.shape, lambda i, j: (0, 0))],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        interpret=interpret,
+    )(a)

@@ -1,0 +1,22 @@
+"""Public maxpool op with output-grid padding."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.maxpool import maxpool as _kernel
+from repro.kernels.maxpool import ref as _ref
+
+
+def maxpool(a: jax.Array, *, r: int, s: int, bm: int = 128, bn: int = 128,
+            use_kernel: bool = True, interpret: bool = True) -> jax.Array:
+    if not use_kernel:
+        return _ref.maxpool(a, r=r, s=s)
+    m, n = a.shape
+    om, on = (m - r) // s + 1, (n - r) // s + 1
+    pm, pn = (-om) % bm, (-on) % bn
+    if pm or pn:
+        a = jnp.pad(a, ((0, pm * s), (0, pn * s)), constant_values=-jnp.inf
+                    if jnp.issubdtype(a.dtype, jnp.floating) else 0)
+    out = _kernel.maxpool(a, r=r, s=s, bm=bm, bn=bn, interpret=interpret)
+    return out[:om, :on]

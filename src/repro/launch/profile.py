@@ -1,0 +1,101 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512").strip()
+
+"""Structural profiler: top traffic/flops/collective contributors per cell.
+
+This formalises the §Perf workflow: every hillclimb iteration started from
+"what are the top-K ops by modelled HBM traffic / collective payload in
+this cell's optimized HLO?" — this CLI answers that from the same
+trip-count-aware analyzer the roofline uses.
+
+    PYTHONPATH=src python -m repro.launch.profile --arch qwen3-moe-235b-a22b \
+        --shape train_4k --variant moeshard --top 15
+"""
+import argparse
+import collections
+
+import jax
+
+from repro.launch import hlo_analysis as ha
+
+
+def profile_hlo(hlo_text: str) -> tuple[list, list, list]:
+    """Returns (traffic rows, dot-flops rows, collective rows), each
+    [(value, op, shape, multiplier)] sorted descending."""
+    comps = ha.parse_module(hlo_text)
+    traffic = collections.Counter()
+    flops = collections.Counter()
+    colls = collections.Counter()
+
+    def walk(comp_name, mult):
+        comp = comps.get(comp_name)
+        if comp is None:
+            return
+        for instr in comp.instrs:
+            if instr.op in ha._SKIP_OPS or instr.name in comp.artifacts:
+                continue
+            if instr.op == "while":
+                for sub in instr.called:
+                    walk(sub, mult * instr.trip_count)
+                continue
+            if instr.op in ("call", "conditional"):
+                for sub in instr.called:
+                    walk(sub, mult)
+                continue
+            key = (instr.op, instr.shape.split("{")[0][:48], int(mult))
+            if instr.op in ha._COLLECTIVES:
+                res = ha.shape_elems_bytes(instr.shape)[1]
+                payload = max(res, ha._operand_bytes(comp, instr))
+                colls[key] += payload * mult
+                continue
+            if instr.op.endswith("-done"):
+                continue
+            rb = ha.shape_elems_bytes(instr.shape)[1]
+            if instr.op == "dynamic-update-slice" and len(instr.operands) >= 2:
+                upd = comp.symbols.get(comp.resolve(instr.operands[1]))
+                tb = 2 * ha.shape_elems_bytes(upd)[1] if upd else rb
+            elif instr.op == "dynamic-slice":
+                tb = 2 * rb
+            elif instr.op == "fusion" and instr.called:
+                tb = ha._fusion_traffic(comps, comp, instr)
+                flops[key] += ha._fusion_flops(comps, instr.called[0]) * mult
+            else:
+                tb = rb + ha._operand_bytes(comp, instr)
+            if instr.op == "dot":
+                flops[key] += ha._dot_flops(comp, instr) * mult
+            traffic[key] += tb * mult
+
+    walk(comps["__entry__"].name, 1.0)
+    fmt = lambda c: [(v,) + k for k, v in c.most_common()]
+    return fmt(traffic), fmt(flops), fmt(colls)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--variant", default="")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--top", type=int, default=12)
+    args = ap.parse_args()
+
+    from repro.launch.dryrun import build_cell
+    from repro.launch.mesh import make_production_mesh
+
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    fn, fargs, in_sh, out_sh, donate, model, shape = build_cell(
+        args.arch, args.shape, mesh, variant=args.variant)
+    compiled = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                       donate_argnums=donate).lower(*fargs).compile()
+    traffic, flops, colls = profile_hlo(compiled.as_text())
+    for title, rows, unit in (("HBM traffic", traffic, "GB"),
+                              ("dot/fused flops", flops, "GF"),
+                              ("collective payload", colls, "GB")):
+        print(f"\n== top {args.top} by {title} (per device) ==")
+        for v, op, shp, mult in rows[:args.top]:
+            print(f"{v/1e9:10.1f}{unit}  x{mult:<5d} {op:20s} {shp}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,150 @@
+"""Core layer primitives: norms, embeddings, MLPs, rotary embeddings.
+
+All layers are (spec-builder, apply-fn) pairs over ParamSpec trees; compute
+is carried out in ``cfg.compute_dtype`` (bf16 by default) with fp32 master
+parameters, matching production mixed-precision practice.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import constrain
+from repro.models.module import ParamSpec
+
+# --------------------------------------------------------------------------
+# Norms
+# --------------------------------------------------------------------------
+
+def rmsnorm_spec(d: int) -> dict:
+    return {"scale": ParamSpec((d,), jnp.float32, ("embed",), init="ones")}
+
+
+def rmsnorm(params: dict, x: jax.Array, eps: float = 1e-6,
+            impl: str = "f32") -> jax.Array:
+    dtype = x.dtype
+    if impl == "bf16_apply":
+        # f32 statistics, bf16 application: the full-width tensors never
+        # materialise in f32 (the reduction reads bf16 and emits [B,S,1]) —
+        # halves the norm-chain HBM traffic (§Perf 'bf16norm')
+        var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1,
+                       keepdims=True)
+        inv = jax.lax.rsqrt(var + eps).astype(dtype)
+        return x * inv * params["scale"].astype(dtype)
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * params["scale"]).astype(dtype)
+
+
+def layernorm_spec(d: int) -> dict:
+    return {
+        "scale": ParamSpec((d,), jnp.float32, ("embed",), init="ones"),
+        "bias": ParamSpec((d,), jnp.float32, ("embed",), init="zeros"),
+    }
+
+
+def layernorm(params: dict, x: jax.Array, eps: float = 1e-5,
+              impl: str = "f32") -> jax.Array:
+    dtype = x.dtype
+    if impl == "bf16_apply":
+        xf = x.astype(jnp.float32)
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        inv = jax.lax.rsqrt(var + eps).astype(dtype)
+        return ((x - mu.astype(dtype)) * inv * params["scale"].astype(dtype)
+                + params["bias"].astype(dtype))
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (x * params["scale"] + params["bias"]).astype(dtype)
+
+
+def norm_spec(kind: str, d: int) -> dict:
+    return rmsnorm_spec(d) if kind == "rmsnorm" else layernorm_spec(d)
+
+
+def apply_norm(kind: str, params: dict, x: jax.Array,
+               impl: str = "f32") -> jax.Array:
+    fn = rmsnorm if kind == "rmsnorm" else layernorm
+    return fn(params, x, impl=impl)
+
+
+# --------------------------------------------------------------------------
+# Embedding / unembedding
+# --------------------------------------------------------------------------
+
+def embedding_spec(vocab: int, d: int) -> dict:
+    # 1/sqrt(d): unit-variance logits under tied unembedding at init
+    return {"table": ParamSpec((vocab, d), jnp.float32, ("vocab", "embed"),
+                               init="embed", init_scale=d ** -0.5)}
+
+
+def embed(params: dict, tokens: jax.Array, compute_dtype) -> jax.Array:
+    out = jnp.take(params["table"].astype(compute_dtype), tokens, axis=0)
+    return constrain(out, "batch", "seq", "embed")
+
+
+def unembed(params: dict, x: jax.Array) -> jax.Array:
+    """Logits in fp32 (loss stability); table shared with embed when tied."""
+    logits = jnp.einsum("bsd,vd->bsv", x.astype(jnp.float32),
+                        params["table"].astype(jnp.float32))
+    return constrain(logits, "batch", "seq", "vocab")
+
+
+# --------------------------------------------------------------------------
+# MLPs
+# --------------------------------------------------------------------------
+
+def mlp_spec(kind: str, d: int, d_ff: int) -> dict:
+    if kind in ("swiglu", "geglu"):
+        return {
+            "w_gate": ParamSpec((d, d_ff), jnp.float32, ("embed", "mlp")),
+            "w_up": ParamSpec((d, d_ff), jnp.float32, ("embed", "mlp")),
+            "w_down": ParamSpec((d_ff, d), jnp.float32, ("mlp", "embed")),
+        }
+    # squared_relu (nemotron) and gelu (whisper/vit) share a 2-matrix shape
+    return {
+        "w_up": ParamSpec((d, d_ff), jnp.float32, ("embed", "mlp")),
+        "w_down": ParamSpec((d_ff, d), jnp.float32, ("mlp", "embed")),
+    }
+
+
+def mlp(kind: str, params: dict, x: jax.Array) -> jax.Array:
+    dtype = x.dtype
+    if kind in ("swiglu", "geglu"):
+        g = jnp.einsum("bsd,df->bsf", x, params["w_gate"].astype(dtype))
+        u = jnp.einsum("bsd,df->bsf", x, params["w_up"].astype(dtype))
+        h = (jax.nn.silu(g) if kind == "swiglu" else jax.nn.gelu(g)) * u
+    else:
+        h = jnp.einsum("bsd,df->bsf", x, params["w_up"].astype(dtype))
+        if kind == "squared_relu":
+            h = jnp.square(jax.nn.relu(h))
+        elif kind == "gelu":
+            h = jax.nn.gelu(h)
+        else:
+            raise ValueError(f"unknown mlp kind {kind}")
+    h = constrain(h, "batch", "seq", "mlp")
+    out = jnp.einsum("bsf,fd->bsd", h, params["w_down"].astype(dtype))
+    return constrain(out, "batch", "seq", "embed")
+
+
+# --------------------------------------------------------------------------
+# Rotary position embeddings
+# --------------------------------------------------------------------------
+
+def rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0) -> jax.Array:
+    """x: [..., seq, heads, head_dim]; positions: [..., seq] (int)."""
+    head_dim = x.shape[-1]
+    half = head_dim // 2
+    freqs = jnp.exp(-jnp.log(theta) * jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # [..., seq, half]
+    cos = jnp.cos(angles)[..., :, None, :]   # broadcast over heads
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([x1f * cos - x2f * sin, x2f * cos + x1f * sin], axis=-1)
+    return out.astype(x.dtype)

@@ -1,0 +1,122 @@
+"""Lightweight param-spec module system (t5x-style logical axes).
+
+Models are pure functions over pytrees of arrays.  Parameters are *declared*
+as ``ParamSpec`` trees carrying shape, dtype, logical axis names and an init
+function; the tree can then be
+
+  * materialised       -> ``init(rng, tree)``
+  * shape-only         -> ``shape_tree(tree)``       (for dry-run lowering)
+  * partitioned        -> ``partition_tree(tree, rules, mesh)``
+
+Logical axis names ("embed", "heads", "mlp", "vocab", "layers", ...) are
+mapped to physical mesh axes by :class:`repro.dist.sharding.ShardingRules`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    """Declaration of a single parameter tensor."""
+
+    shape: tuple[int, ...]
+    dtype: Any = jnp.float32
+    logical_axes: tuple[Optional[str], ...] = ()
+    init: str = "normal"          # normal | zeros | ones | embed | scaled
+    init_scale: float = 1.0
+    fan_in_axes: tuple[int, ...] = ()   # axes contracted by the consumer
+
+    def __post_init__(self):
+        if self.logical_axes and len(self.logical_axes) != len(self.shape):
+            raise ValueError(
+                f"logical_axes {self.logical_axes} rank-mismatch shape {self.shape}"
+            )
+
+    # -- materialisation -------------------------------------------------
+    def instantiate(self, rng: jax.Array) -> jax.Array:
+        if self.init == "zeros":
+            return jnp.zeros(self.shape, self.dtype)
+        if self.init == "ones":
+            return jnp.ones(self.shape, self.dtype)
+        if self.init == "embed":
+            return (jax.random.normal(rng, self.shape, jnp.float32)
+                    * self.init_scale).astype(self.dtype)
+        # variance-scaling (fan-in) init, the default for projection weights
+        fan_in = 1
+        for ax in (self.fan_in_axes or tuple(range(len(self.shape) - 1))):
+            fan_in *= self.shape[ax]
+        std = self.init_scale / math.sqrt(max(fan_in, 1))
+        return (jax.random.normal(rng, self.shape, jnp.float32) * std).astype(self.dtype)
+
+    def shape_struct(self) -> jax.ShapeDtypeStruct:
+        return jax.ShapeDtypeStruct(self.shape, self.dtype)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def tree_map_specs(fn: Callable[[ParamSpec], Any], tree: PyTree) -> PyTree:
+    return jax.tree.map(fn, tree, is_leaf=is_spec)
+
+
+def init(rng: jax.Array, tree: PyTree) -> PyTree:
+    """Materialise a ParamSpec tree into concrete arrays (folding rng per-leaf)."""
+    leaves, treedef = jax.tree.flatten(tree, is_leaf=is_spec)
+    out = []
+    for i, leaf in enumerate(leaves):
+        out.append(leaf.instantiate(jax.random.fold_in(rng, i)))
+    return jax.tree.unflatten(treedef, out)
+
+
+def shape_tree(tree: PyTree) -> PyTree:
+    """ShapeDtypeStruct tree — used by the dry-run (no allocation).
+
+    Leaves that are already ShapeDtypeStructs pass through unchanged."""
+    return tree_map_specs(
+        lambda s: s.shape_struct() if is_spec(s) else s, tree)
+
+
+def logical_axes_tree(tree: PyTree) -> PyTree:
+    return tree_map_specs(lambda s: s.logical_axes, tree)
+
+
+def stack(spec: ParamSpec, n: int, axis_name: str = "layers") -> ParamSpec:
+    """Prepend a stacking axis (for scanned layer stacks)."""
+    return dataclasses.replace(
+        spec,
+        shape=(n,) + spec.shape,
+        logical_axes=((axis_name,) + (spec.logical_axes or (None,) * len(spec.shape))),
+        fan_in_axes=tuple(a + 1 for a in (spec.fan_in_axes or tuple(range(len(spec.shape) - 1)))),
+    )
+
+
+def stack_tree(tree: PyTree, n: int, axis_name: str = "layers") -> PyTree:
+    return tree_map_specs(lambda s: stack(s, n, axis_name), tree)
+
+
+def count_params(tree: PyTree) -> int:
+    leaves = jax.tree.leaves(tree, is_leaf=is_spec)
+    total = 0
+    for leaf in leaves:
+        shape = leaf.shape if is_spec(leaf) else leaf.shape
+        total += int(np.prod(shape)) if shape else 1
+    return total
+
+
+def param_bytes(tree: PyTree) -> int:
+    leaves = jax.tree.flatten(tree, is_leaf=is_spec)[0]
+    total = 0
+    for leaf in leaves:
+        size = int(np.prod(leaf.shape)) if leaf.shape else 1
+        total += size * jnp.dtype(leaf.dtype).itemsize
+    return total

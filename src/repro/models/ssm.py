@@ -1,0 +1,98 @@
+"""Selective SSM (Mamba-style) core, used by the Hymba hybrid blocks.
+
+Training/prefill uses a *chunked* associative scan: sequential ``lax.scan``
+over sequence chunks carrying the SSM state, with a parallel
+``associative_scan`` inside each chunk — peak activation O(chunk * d * state)
+instead of O(S * d * state).  Decode is the O(1) recurrent step.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.dist.sharding import constrain
+from repro.models.module import ParamSpec
+
+
+def ssm_spec(cfg: ArchConfig, d_inner: int) -> dict:
+    n = cfg.ssm_state
+    return {
+        "w_dt": ParamSpec((d_inner,), jnp.float32, (None,), init="zeros"),
+        "w_dt_proj": ParamSpec((d_inner, d_inner), jnp.float32, ("state", None),
+                               init_scale=0.01),
+        "w_B": ParamSpec((d_inner, n), jnp.float32, ("state", None)),
+        "w_C": ParamSpec((d_inner, n), jnp.float32, ("state", None)),
+        "A_log": ParamSpec((d_inner, n), jnp.float32, ("state", None), init="zeros"),
+        "D": ParamSpec((d_inner,), jnp.float32, (None,), init="ones"),
+    }
+
+
+def _discretize(params, u):
+    """u: [B,S,di] -> (A_bar [B,S,di,n], Bx [B,S,di,n], C [B,S,n])."""
+    f32 = jnp.float32
+    dt = jax.nn.softplus(
+        jnp.einsum("bsd,de->bse", u.astype(f32), params["w_dt_proj"].astype(f32))
+        + params["w_dt"])                                     # [B,S,di]
+    A = -jnp.exp(params["A_log"].astype(f32)) - 1e-3          # [di,n], strictly stable
+    B = jnp.einsum("bsd,dn->bsn", u.astype(f32), params["w_B"].astype(f32))
+    C = jnp.einsum("bsd,dn->bsn", u.astype(f32), params["w_C"].astype(f32))
+    A_bar = jnp.exp(dt[..., None] * A[None, None])            # [B,S,di,n]
+    Bx = (dt * u.astype(f32))[..., None] * B[:, :, None, :]   # [B,S,di,n]
+    return A_bar, Bx, C
+
+
+def _assoc_op(e1, e2):
+    a1, b1 = e1
+    a2, b2 = e2
+    return a2 * a1, a2 * b1 + b2
+
+
+def ssm_apply(params: dict, u: jax.Array, *, chunk: int = 1024,
+              h0: jax.Array | None = None) -> tuple[jax.Array, jax.Array]:
+    """Run the selective SSM over a full sequence.
+
+    u: [B,S,di]  ->  (y: [B,S,di], h_final: [B,di,n])
+    """
+    b, s, di = u.shape
+    n = params["w_B"].shape[1]
+    A_bar, Bx, C = _discretize(params, u)
+    if h0 is None:
+        h0 = jnp.zeros((b, di, n), jnp.float32)
+
+    n_chunks = -(-s // chunk)
+    pad = n_chunks * chunk - s
+    if pad:
+        # padded steps: A_bar=1, Bx=0 leaves the state untouched
+        A_bar = jnp.pad(A_bar, ((0, 0), (0, pad), (0, 0), (0, 0)),
+                        constant_values=1.0)
+        Bx = jnp.pad(Bx, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+    sp = n_chunks * chunk
+    A_c = A_bar.reshape(b, n_chunks, chunk, di, n).transpose(1, 0, 2, 3, 4)
+    B_c = Bx.reshape(b, n_chunks, chunk, di, n).transpose(1, 0, 2, 3, 4)
+    C_c = C.reshape(b, n_chunks, chunk, n).transpose(1, 0, 2, 3)
+
+    def chunk_step(h, inputs):
+        a_i, b_i, c_i = inputs                       # [B,chunk,di,n] x2, [B,chunk,n]
+        # fold carried state into the first element of the chunk
+        b_i = b_i.at[:, 0].add(a_i[:, 0] * h)
+        a_cum, h_all = jax.lax.associative_scan(_assoc_op, (a_i, b_i), axis=1)
+        del a_cum
+        y = jnp.einsum("bcdn,bcn->bcd", h_all, c_i)  # [B,chunk,di]
+        return h_all[:, -1], y
+
+    h_final, ys = jax.lax.scan(jax.checkpoint(chunk_step), h0, (A_c, B_c, C_c))
+    y = ys.transpose(1, 0, 2, 3).reshape(b, sp, di)[:, :s]
+    y = y + u.astype(jnp.float32) * params["D"]
+    return y.astype(u.dtype), h_final
+
+
+def ssm_decode_step(params: dict, u: jax.Array, h: jax.Array
+                    ) -> tuple[jax.Array, jax.Array]:
+    """One token.  u: [B,1,di], h: [B,di,n] -> (y [B,1,di], h')."""
+    A_bar, Bx, C = _discretize(params, u)
+    h_new = A_bar[:, 0] * h + Bx[:, 0]                        # [B,di,n]
+    y = jnp.einsum("bdn,bn->bd", h_new, C[:, 0])[:, None]     # [B,1,di]
+    y = y + u.astype(jnp.float32) * params["D"]
+    return y.astype(u.dtype), h_new

@@ -1,0 +1,231 @@
+"""xLSTM blocks: matrix-memory mLSTM (chunkwise-parallel) and sLSTM.
+
+mLSTM training/prefill uses the *chunkwise* form: a sequential ``lax.scan``
+over sequence chunks carrying the stabilised state (C, n, m), quadratic
+attention-like compute inside each chunk — O(S*chunk) instead of O(S^2).
+Decode is the O(1) recurrent step (this is what makes xlstm-1.3b runnable at
+the long_500k shape).  Stabilisation follows the xLSTM paper (max-state m).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.dist.sharding import constrain
+from repro.models.layers import apply_norm, norm_spec
+from repro.models.module import ParamSpec
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def mlstm_spec(cfg: ArchConfig) -> dict:
+    d = cfg.d_model
+    di = 2 * d                        # projection factor 2 (xLSTM-1.3b recipe)
+    h = cfg.n_heads
+    dh = di // h
+    return {
+        "norm": norm_spec(cfg.norm_kind, d),
+        "w_up": ParamSpec((d, 2 * di), jnp.float32, ("embed", "mlp")),
+        "wq": ParamSpec((di, h, dh), jnp.float32, ("mlp", "heads", "head_dim")),
+        "wk": ParamSpec((di, h, dh), jnp.float32, ("mlp", "heads", "head_dim")),
+        "wv": ParamSpec((di, h, dh), jnp.float32, ("mlp", "heads", "head_dim")),
+        "w_if": ParamSpec((di, 2 * h), jnp.float32, ("mlp", None), init_scale=0.1),
+        "b_if": ParamSpec((2 * h,), jnp.float32, (None,), init="zeros"),
+        "w_down": ParamSpec((di, d), jnp.float32, ("mlp", "embed")),
+    }
+
+
+def _mlstm_gates(params, u):
+    """u: [B,S,di] -> (log_i, log_f): [B,S,H] in fp32."""
+    h2 = params["w_if"].shape[1] // 2
+    g = jnp.einsum("bsd,dg->bsg", u.astype(jnp.float32),
+                   params["w_if"].astype(jnp.float32)) + params["b_if"]
+    log_i = g[..., :h2]                               # pre-activation ~ log input gate
+    log_f = jax.nn.log_sigmoid(g[..., h2:])           # sigmoid forget gate
+    return log_i, log_f
+
+
+def _mlstm_chunk(scale, carry, chunk):
+    """Chunkwise mLSTM step.  carry: (C [B,H,dh,dh], n [B,H,dh], m [B,H])."""
+    C, n, m = carry
+    q, k, v, log_i, log_f = chunk         # q,k,v: [B,L,H,dh]; gates: [B,L,H]
+    f32 = jnp.float32
+    q, k, v = q.astype(f32), k.astype(f32), v.astype(f32)
+    L = q.shape[1]
+    F = jnp.cumsum(log_f, axis=1)                          # [B,L,H]
+    # intra-chunk log weights: logD[b,i,j,h] = F_i - F_j + log_i_j  (j <= i)
+    logD = F[:, :, None, :] - F[:, None, :, :] + log_i[:, None, :, :]
+    tri = jnp.tril(jnp.ones((L, L), bool))
+    logD = jnp.where(tri[None, :, :, None], logD, NEG_INF)
+    # per-query stabiliser across {carried state, intra-chunk keys}
+    m_inter = m[:, None, :] + F                            # [B,L,H]
+    m_new_q = jnp.maximum(m_inter, logD.max(axis=2))       # [B,L,H]
+    g = jnp.exp(m_inter - m_new_q)                         # carried-state factor
+    D = jnp.exp(logD - m_new_q[:, :, None, :])             # [B,L,L,H]
+    qk = jnp.einsum("blhd,bjhd->bljh", q, k) * scale       # [B,L,L,H]
+    w_intra = D * qk
+    num = (jnp.einsum("blh,bhde,blhe->blhd", g, C, q * scale)
+           + jnp.einsum("bljh,bjhd->blhd", w_intra, v))    # [B,L,H,dh]
+    den = (g * jnp.einsum("bhd,blhd->blh", n, q * scale)
+           + w_intra.sum(axis=2))                          # [B,L,H]
+    h_tilde = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_new_q))[..., None]
+    # end-of-chunk state update
+    m_end = jnp.maximum(m + F[:, -1], (F[:, -1:, :] - F + log_i).max(axis=1))
+    decay_old = jnp.exp(m + F[:, -1] - m_end)              # [B,H]
+    w_end = jnp.exp(F[:, -1:, :] - F + log_i - m_end[:, None, :])  # [B,L,H]
+    C_new = (decay_old[..., None, None] * C
+             + jnp.einsum("blh,blhd,blhe->bhde", w_end, v, k))
+    n_new = decay_old[..., None] * n + jnp.einsum("blh,blhd->bhd", w_end, k)
+    return (C_new, n_new, m_end), h_tilde
+
+
+def mlstm_apply(cfg: ArchConfig, params: dict, x: jax.Array, *,
+                chunk: int = 256, state=None) -> tuple[jax.Array, tuple]:
+    """mLSTM block forward.  x: [B,S,d] -> (y [B,S,d], final state)."""
+    b, s, d = x.shape
+    di = 2 * d
+    h = cfg.n_heads
+    dh = di // h
+    u = apply_norm(cfg.norm_kind, params["norm"], x, impl=cfg.norm_impl)
+    up = jnp.einsum("bsd,de->bse", u, params["w_up"].astype(x.dtype))
+    core_in, gate = up[..., :di], up[..., di:]
+    q = jnp.einsum("bse,ehd->bshd", core_in, params["wq"].astype(x.dtype))
+    k = jnp.einsum("bse,ehd->bshd", core_in, params["wk"].astype(x.dtype))
+    v = jnp.einsum("bse,ehd->bshd", core_in, params["wv"].astype(x.dtype))
+    log_i, log_f = _mlstm_gates(params, core_in)
+
+    if state is None:
+        C0 = jnp.zeros((b, h, dh, dh), jnp.float32)
+        n0 = jnp.zeros((b, h, dh), jnp.float32)
+        m0 = jnp.zeros((b, h), jnp.float32)
+        state = (C0, n0, m0)
+
+    L = min(chunk, s)
+    n_chunks = -(-s // L)
+    pad = n_chunks * L - s
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        log_i = jnp.pad(log_i, ((0, 0), (0, pad), (0, 0)), constant_values=NEG_INF)
+        log_f = jnp.pad(log_f, ((0, 0), (0, pad), (0, 0)))  # f=1 would drift m; 0 ok
+    def to_chunks(a):
+        return a.reshape((b, n_chunks, L) + a.shape[2:]).transpose(
+            (1, 0, 2) + tuple(range(3, a.ndim + 1)))
+    scale = dh ** -0.5
+    import functools
+    body = functools.partial(_mlstm_chunk, scale)
+    state, hs = jax.lax.scan(jax.checkpoint(body), state,
+                             tuple(map(to_chunks, (q, k, v, log_i, log_f))))
+    h_tilde = hs.transpose(1, 0, 2, 3, 4).reshape(b, n_chunks * L, h, dh)[:, :s]
+    h_tilde = h_tilde.reshape(b, s, di).astype(x.dtype)
+    gated = h_tilde * jax.nn.silu(gate)
+    y = jnp.einsum("bse,ed->bsd", gated, params["w_down"].astype(x.dtype))
+    return constrain(y, "batch", "seq", "embed"), state
+
+
+def mlstm_decode_step(cfg: ArchConfig, params: dict, x: jax.Array, state
+                      ) -> tuple[jax.Array, tuple]:
+    """One token through an mLSTM block.  x: [B,1,d]."""
+    b, _, d = x.shape
+    di = 2 * d
+    h = cfg.n_heads
+    dh = di // h
+    C, n, m = state
+    f32 = jnp.float32
+    u = apply_norm(cfg.norm_kind, params["norm"], x, impl=cfg.norm_impl)
+    up = jnp.einsum("bsd,de->bse", u, params["w_up"].astype(x.dtype))
+    core_in, gate = up[..., :di], up[..., di:]
+    q = jnp.einsum("bse,ehd->bshd", core_in, params["wq"].astype(x.dtype))[:, 0]
+    k = jnp.einsum("bse,ehd->bshd", core_in, params["wk"].astype(x.dtype))[:, 0]
+    v = jnp.einsum("bse,ehd->bshd", core_in, params["wv"].astype(x.dtype))[:, 0]
+    log_i, log_f = _mlstm_gates(params, core_in)
+    log_i, log_f = log_i[:, 0], log_f[:, 0]                  # [B,H]
+    m_new = jnp.maximum(log_f + m, log_i)
+    f_p = jnp.exp(log_f + m - m_new)[..., None]
+    i_p = jnp.exp(log_i - m_new)[..., None]
+    k32, v32, q32 = k.astype(f32), v.astype(f32), q.astype(f32) * (dh ** -0.5)
+    C_new = f_p[..., None] * C + i_p[..., None] * jnp.einsum("bhd,bhe->bhde", v32, k32)
+    n_new = f_p * n + i_p * k32
+    num = jnp.einsum("bhde,bhe->bhd", C_new, q32)
+    den = jnp.einsum("bhd,bhd->bh", n_new, q32)
+    h_tilde = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_new))[..., None]
+    h_tilde = h_tilde.reshape(b, 1, di).astype(x.dtype)
+    y = jnp.einsum("bse,ed->bsd", h_tilde * jax.nn.silu(gate),
+                   params["w_down"].astype(x.dtype))
+    return y, (C_new, n_new, m_new)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def slstm_spec(cfg: ArchConfig) -> dict:
+    d = cfg.d_model
+    h = cfg.n_heads
+    dh = d // h
+    return {
+        "norm": norm_spec(cfg.norm_kind, d),
+        "w_gates": ParamSpec((d, 4 * d), jnp.float32, ("embed", "mlp")),
+        "r_gates": ParamSpec((h, dh, 4 * dh), jnp.float32,
+                             ("heads", "head_dim", None), fan_in_axes=(1,)),
+        "b_gates": ParamSpec((4 * d,), jnp.float32, (None,), init="zeros"),
+        "w_out": ParamSpec((d, d), jnp.float32, ("embed", "embed")),
+    }
+
+
+def _slstm_cell(params, h_heads, carry, x_row):
+    """One sLSTM step.  carry: (c,n,m,hprev) each [B,d]; x_row: [B,4d]."""
+    c, n, m, hprev = carry
+    b, d = c.shape
+    dh = d // h_heads
+    f32 = jnp.float32
+    hp = hprev.reshape(b, h_heads, dh)
+    rec = jnp.einsum("bhd,hde->bhe", hp, params["r_gates"].astype(f32))
+    gates = x_row + rec.reshape(b, 4 * d) + params["b_gates"]
+    zt, it, ft, ot = jnp.split(gates, 4, axis=-1)
+    z = jnp.tanh(zt)
+    log_f = jax.nn.log_sigmoid(ft)
+    m_new = jnp.maximum(log_f + m, it)
+    i_p = jnp.exp(it - m_new)
+    f_p = jnp.exp(log_f + m - m_new)
+    c_new = f_p * c + i_p * z
+    n_new = f_p * n + i_p
+    h_new = jax.nn.sigmoid(ot) * c_new / jnp.maximum(n_new, 1e-6)
+    return (c_new, n_new, m_new, h_new), h_new
+
+
+def slstm_apply(cfg: ArchConfig, params: dict, x: jax.Array,
+                state=None) -> tuple[jax.Array, tuple]:
+    """sLSTM block forward (sequential over S).  x: [B,S,d]."""
+    b, s, d = x.shape
+    u = apply_norm(cfg.norm_kind, params["norm"], x, impl=cfg.norm_impl)
+    xg = jnp.einsum("bsd,de->bse", u.astype(jnp.float32),
+                    params["w_gates"].astype(jnp.float32))   # [B,S,4d]
+    if state is None:
+        z = jnp.zeros((b, d), jnp.float32)
+        state = (z, z, z, z)
+    import functools
+    cell = functools.partial(_slstm_cell, params, cfg.n_heads)
+    state, hs = jax.lax.scan(jax.checkpoint(cell), state,
+                             xg.transpose(1, 0, 2))
+    y = jnp.einsum("bsd,de->bse", hs.transpose(1, 0, 2).astype(x.dtype),
+                   params["w_out"].astype(x.dtype))
+    return constrain(y, "batch", "seq", "embed"), state
+
+
+def slstm_decode_step(cfg: ArchConfig, params: dict, x: jax.Array, state
+                      ) -> tuple[jax.Array, tuple]:
+    b, _, d = x.shape
+    u = apply_norm(cfg.norm_kind, params["norm"], x, impl=cfg.norm_impl)
+    xg = jnp.einsum("bsd,de->bse", u.astype(jnp.float32),
+                    params["w_gates"].astype(jnp.float32))[:, 0]
+    state, h = _slstm_cell(params, cfg.n_heads, state, xg)
+    y = jnp.einsum("bd,de->be", h.astype(x.dtype),
+                   params["w_out"].astype(x.dtype))[:, None]
+    return y, state

@@ -1,0 +1,2 @@
+from repro.optim.adamw import AdamW, AdamWState, global_norm  # noqa: F401
+from repro.optim.schedules import constant, warmup_cosine  # noqa: F401

@@ -1,0 +1,50 @@
+"""Int8 error-feedback gradient compression (distributed-optimization trick).
+
+Quantise per-tensor to int8 before the (conceptual) cross-pod all-reduce and
+keep the quantisation residual locally, adding it back into the next step's
+gradient (error feedback, 1-bit-Adam style).  On a real pod this shrinks the
+data-parallel all-reduce payload 4x; numerics are exercised by unit tests —
+convergence is preserved by the error feedback loop.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class CompressionState(NamedTuple):
+    residual: Any
+
+
+def init(params) -> CompressionState:
+    return CompressionState(residual=jax.tree.map(
+        lambda p: jnp.zeros_like(p, jnp.float32), params))
+
+
+def quantize(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    scale = jnp.max(jnp.abs(x)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_grads(grads, state: CompressionState
+                   ) -> tuple[Any, CompressionState]:
+    """Returns (decompressed grads as seen post-all-reduce, new residuals)."""
+    def one(g, r):
+        g = g.astype(jnp.float32) + r
+        q, s = quantize(g)
+        deq = dequantize(q, s)
+        return deq, g - deq
+
+    flat = jax.tree.map(one, grads, state.residual)
+    deq = jax.tree.map(lambda t: t[0], flat,
+                       is_leaf=lambda t: isinstance(t, tuple))
+    res = jax.tree.map(lambda t: t[1], flat,
+                       is_leaf=lambda t: isinstance(t, tuple))
+    return deq, CompressionState(residual=res)

@@ -1,0 +1,137 @@
+"""Continuous (iteration-level) batching engine.
+
+Slots share one global cache index; a request admitted at step t gets
+``start[slot] = t`` — its stale cache region is masked by the attention
+visibility test and its rope positions are request-local, so NO cache reset
+or copy is needed on admission.  Prompt tokens are consumed one per step
+(piggyback/chunked prefill): a freshly admitted request "catches up" while
+other slots keep generating, which is exactly the orca-style schedule that
+keeps the decode batch full.
+
+Admission order can be cost-aware: with a fitted NN+C step-time model the
+queue is served shortest-predicted-job-first (the paper's runtime mapping
+decision, §1).
+
+Restriction: attention-family archs (KV-cache state only).  Recurrent
+states (SSM/xLSTM) would need per-slot state resets on admission — noted in
+DESIGN.md as the extension point.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.registry import Model
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: list                 # token ids
+    max_new: int
+    # filled by the engine
+    generated: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ContinuousBatcher:
+    def __init__(self, model: Model, params, *, max_slots: int,
+                 max_seq: int, cost_model=None):
+        cfg = model.cfg
+        assert not cfg.encdec and cfg.layer_pattern == ("attn",) or all(
+            k in ("attn", "local") for k in cfg.layer_pattern), \
+            "continuous batching supports attention-family archs"
+        self.model = model
+        self.params = params
+        self.max_slots = max_slots
+        self.max_seq = max_seq
+        self.cost_model = cost_model
+        self.cache = model.init_cache(max_slots, max_seq)
+        self.index = 0
+        self.slots: list[Optional[Request]] = [None] * max_slots
+        self.start = np.zeros(max_slots, np.int32)
+        self.prompt_left = np.zeros(max_slots, np.int32)
+        self.queue: deque[Request] = deque()
+        self.steps = 0
+        self.busy_slot_steps = 0
+
+        def step_fn(params, cache, tokens, index, start):
+            logits, cache = model.decode_step(params, cache, tokens, index,
+                                              start=start)
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
+
+        self._step = jax.jit(step_fn, donate_argnums=(1,))
+
+    # -- queue ---------------------------------------------------------------
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _admit(self):
+        free = [i for i, s in enumerate(self.slots) if s is None]
+        if not free or not self.queue:
+            return
+        if self.cost_model is not None:
+            # shortest-predicted-job-first (NN+C runtime mapping)
+            jobs = sorted(self.queue,
+                          key=lambda r: self.cost_model(len(r.prompt),
+                                                        r.max_new))
+            self.queue = deque(jobs)
+        for slot in free:
+            if not self.queue:
+                break
+            req = self.queue.popleft()
+            if self.index + len(req.prompt) + req.max_new > self.max_seq:
+                self.queue.appendleft(req)   # would overflow: wait for reset
+                break
+            self.slots[slot] = req
+            self.start[slot] = self.index
+            self.prompt_left[slot] = len(req.prompt)
+
+    # -- one engine iteration --------------------------------------------------
+    def step(self) -> bool:
+        """Returns True while there is work."""
+        self._admit()
+        active = [i for i, s in enumerate(self.slots) if s is not None]
+        if not active and not self.queue:
+            return False
+        tokens = np.zeros((self.max_slots, 1), np.int32)
+        for i in active:
+            req = self.slots[i]
+            consumed = len(req.prompt) - int(self.prompt_left[i])
+            if self.prompt_left[i] > 0:
+                tokens[i, 0] = req.prompt[consumed]
+            else:
+                tokens[i, 0] = req.generated[-1]
+        next_tok, self.cache = self._step(
+            self.params, self.cache, jnp.asarray(tokens),
+            jnp.int32(self.index), jnp.asarray(self.start))
+        next_tok = np.asarray(next_tok)
+        for i in active:
+            req = self.slots[i]
+            if self.prompt_left[i] > 1:
+                self.prompt_left[i] -= 1          # still prefilling: ignore
+            elif self.prompt_left[i] == 1:
+                self.prompt_left[i] = 0           # last prompt token: first gen
+                req.generated.append(int(next_tok[i, 0]))
+            else:
+                req.generated.append(int(next_tok[i, 0]))
+            if len(req.generated) >= req.max_new:
+                req.done = True
+                self.slots[i] = None
+        self.index += 1
+        self.steps += 1
+        self.busy_slot_steps += len(active)
+        return True
+
+    def run(self, max_steps: int = 100000) -> dict:
+        while self.step():
+            if self.steps >= max_steps:
+                break
+        return {"engine_steps": self.steps,
+                "occupancy": self.busy_slot_steps
+                / max(self.steps * self.max_slots, 1)}

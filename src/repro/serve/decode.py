@@ -1,0 +1,72 @@
+"""Serving steps: prefill and single-token decode (greedy / temperature).
+
+``make_serve_step`` is what the decode_* dry-run shapes lower: one new token
+per sequence against a KV cache of ``seq_len`` positions.  The KV cache is
+sequence-sharded (see ``serve_rules``) — the softmax over the sharded axis
+becomes a distributed log-sum-exp handled by SPMD partitioning.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.registry import Model
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    temperature: float = 0.0       # 0 => greedy
+    k_chunk: int = 1024
+
+
+def sample(logits: jax.Array, rng: Optional[jax.Array],
+           temperature: float) -> jax.Array:
+    """logits [B,1,V] -> tokens [B,1]."""
+    if temperature <= 0.0 or rng is None:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jax.random.categorical(rng, logits / temperature, axis=-1).astype(jnp.int32)
+
+
+def make_serve_step(model: Model, cfg: ServeConfig = ServeConfig()):
+    """(params, cache, tokens [B,1], cache_index) -> (next_tokens, logits, cache)."""
+
+    def serve_step(params, cache, tokens, cache_index):
+        logits, cache = model.decode_step(params, cache, tokens, cache_index)
+        next_tokens = sample(logits, None, cfg.temperature)
+        return next_tokens, logits, cache
+
+    return serve_step
+
+
+def make_prefill_step(model: Model, max_seq: int,
+                      cfg: ServeConfig = ServeConfig()):
+    """(params, batch) -> (first sampled token, cache filled to len(tokens))."""
+
+    def prefill_step(params, batch):
+        logits, cache = model.prefill(params, batch, max_seq,
+                                      k_chunk=cfg.k_chunk)
+        next_tokens = sample(logits[:, -1:], None, cfg.temperature)
+        return next_tokens, cache
+
+    return prefill_step
+
+
+def generate(model: Model, params, prompt: jax.Array, max_new: int,
+             max_seq: int, cfg: ServeConfig = ServeConfig(),
+             extras: Optional[dict] = None) -> jax.Array:
+    """Simple generation loop (prefill + greedy decode) for the examples."""
+    batch = {"tokens": prompt}
+    if extras:
+        batch.update(extras)
+    prefill = jax.jit(make_prefill_step(model, max_seq, cfg))
+    step = jax.jit(make_serve_step(model, cfg))
+    tok, cache = prefill(params, batch)
+    out = [tok]
+    idx = prompt.shape[1]
+    for i in range(max_new - 1):
+        tok, _, cache = step(params, cache, tok, jnp.int32(idx + i))
+        out.append(tok)
+    return jnp.concatenate(out, axis=1)

@@ -1,0 +1,164 @@
+"""Training step factory: loss, grads, optimizer, metrics — sharding-aware.
+
+``make_train_step`` builds a pure function suitable for ``jax.jit`` with
+explicit in/out shardings.  Supports gradient-accumulation microbatching
+(``lax.scan`` over microbatches), optional int8 error-feedback gradient
+compression, and a z-loss regulariser on the logits (production default for
+big-vocab models).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.registry import Model
+from repro.optim import compression as comp_mod
+from repro.optim.adamw import AdamW, AdamWState
+
+IGNORE_LABEL = -100
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  z_loss: float = 1e-4) -> tuple[jax.Array, jax.Array]:
+    """Mean CE over non-ignored positions (+ z-loss). logits fp32 [B,S,V]."""
+    mask = (labels != IGNORE_LABEL)
+    safe_labels = jnp.where(mask, labels, 0)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, safe_labels[..., None], axis=-1)[..., 0]
+    nll = (lse - gold) * mask
+    zl = z_loss * jnp.square(lse) * mask
+    denom = jnp.maximum(mask.sum(), 1)
+    return (nll.sum() + zl.sum()) / denom, nll.sum() / denom
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainStepConfig:
+    microbatches: int = 1
+    aux_loss_weight: float = 0.01      # MoE load-balance
+    z_loss: float = 1e-4
+    remat: bool = True
+    k_chunk: int = 1024                # flash-attention KV chunk
+    local_block: bool = False          # banded sliding-window attention
+    remat_policy: str = "full"         # full | dots (save dot outputs)
+    ring: bool = False                 # explicit ring attention (with sp)
+    ce_seq_chunk: int = 512            # chunked-CE segment (0 => full logits)
+    grad_compression: bool = False
+
+
+def chunked_cross_entropy(hidden: jax.Array, table: jax.Array,
+                          labels: jax.Array, *, chunk: int,
+                          z_loss: float = 1e-4) -> tuple[jax.Array, jax.Array]:
+    """CE over [B,S,d] hidden states without materialising [B,S,V] logits.
+
+    Scans over sequence segments; each segment computes its logits, LSE and
+    gold logit, then is rematerialised in the backward pass — peak logits
+    memory is O(B * chunk * V) instead of O(B * S * V).  This is the
+    production big-vocab loss (gemma3's 262k vocab makes the naive path the
+    HBM-capacity bottleneck; see EXPERIMENTS.md §Perf)."""
+    b, s, d = hidden.shape
+    n_chunks = -(-s // chunk)
+    pad = n_chunks * chunk - s
+    if pad:
+        hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)),
+                         constant_values=IGNORE_LABEL)
+    h_c = hidden.reshape(b, n_chunks, chunk, d).transpose(1, 0, 2, 3)
+    l_c = labels.reshape(b, n_chunks, chunk).transpose(1, 0, 2)
+    t32 = table.astype(jnp.float32)
+
+    def seg(carry, seg_in):
+        nll_sum, zl_sum, count = carry
+        h, lab = seg_in
+        logits = jnp.einsum("bsd,vd->bsv", h.astype(jnp.float32), t32)
+        mask = lab != IGNORE_LABEL
+        safe = jnp.where(mask, lab, 0)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+        nll_sum = nll_sum + ((lse - gold) * mask).sum()
+        zl_sum = zl_sum + (jnp.square(lse) * mask).sum()
+        count = count + mask.sum()
+        return (nll_sum, zl_sum, count), None
+
+    init = (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32),
+            jnp.zeros((), jnp.int32))
+    (nll, zl, count), _ = jax.lax.scan(jax.checkpoint(seg), init, (h_c, l_c))
+    denom = jnp.maximum(count, 1).astype(jnp.float32)
+    return (nll + z_loss * zl) / denom, nll / denom
+
+
+def _pad_vision_labels(model: Model, batch: dict) -> jax.Array:
+    labels = batch["labels"]
+    cfg = model.cfg
+    if cfg.frontend == "patch" and "patches" in batch:
+        n_vis = batch["patches"].shape[1]
+        pad = jnp.full((labels.shape[0], n_vis), IGNORE_LABEL, labels.dtype)
+        labels = jnp.concatenate([pad, labels], axis=1)
+    return labels
+
+
+def make_loss_fn(model: Model, cfg: TrainStepConfig):
+    def loss_fn(params, batch):
+        labels = _pad_vision_labels(model, batch)
+        if cfg.ce_seq_chunk:
+            hidden, aux = model.forward(params, batch, remat=cfg.remat,
+                                        k_chunk=cfg.k_chunk,
+                                        local_block=cfg.local_block,
+                                        ring=cfg.ring,
+                                        remat_policy=cfg.remat_policy,
+                                        return_hidden=True)
+            loss, ce = chunked_cross_entropy(
+                hidden, model.unembed_table(params), labels,
+                chunk=cfg.ce_seq_chunk, z_loss=cfg.z_loss)
+        else:
+            logits, aux = model.forward(params, batch, remat=cfg.remat,
+                                        k_chunk=cfg.k_chunk,
+                                        local_block=cfg.local_block)
+            loss, ce = cross_entropy(logits, labels, cfg.z_loss)
+        total = loss + cfg.aux_loss_weight * aux
+        return total, {"ce": ce, "aux": aux}
+    return loss_fn
+
+
+def make_train_step(model: Model, optimizer: AdamW,
+                    cfg: TrainStepConfig = TrainStepConfig()):
+    loss_fn = make_loss_fn(model, cfg)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(params, opt_state: AdamWState, batch: dict,
+                   comp_state=None):
+        if cfg.microbatches > 1:
+            def micro(i, b):
+                return jax.tree.map(
+                    lambda x: x.reshape((cfg.microbatches, -1) + x.shape[1:])[i], b)
+            def body(carry, i):
+                gsum, msum = carry
+                (l, m), g = grad_fn(params, micro(i, batch))
+                gsum = jax.tree.map(jnp.add, gsum, g)
+                msum = {"loss": msum["loss"] + l, "ce": msum["ce"] + m["ce"],
+                        "aux": msum["aux"] + m["aux"]}
+                return (gsum, msum), None
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            m0 = {"loss": 0.0, "ce": 0.0, "aux": 0.0}
+            (grads, msum), _ = jax.lax.scan(
+                body, (zeros, m0), jnp.arange(cfg.microbatches))
+            inv = 1.0 / cfg.microbatches
+            grads = jax.tree.map(lambda g: g * inv, grads)
+            metrics = {k: v * inv for k, v in msum.items()}
+            loss = metrics.pop("loss")
+        else:
+            (loss, metrics), grads = grad_fn(params, batch)
+
+        if cfg.grad_compression and comp_state is not None:
+            grads, comp_state = comp_mod.compress_grads(grads, comp_state)
+
+        new_params, new_opt_state, gnorm = optimizer.update(grads, opt_state, params)
+        out_metrics = {"loss": loss, "grad_norm": gnorm, **metrics}
+        if cfg.grad_compression:
+            return new_params, new_opt_state, comp_state, out_metrics
+        return new_params, new_opt_state, out_metrics
+
+    return train_step

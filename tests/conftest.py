@@ -1,0 +1,10 @@
+import os
+import sys
+
+# tests run against the single real CPU device (the dry-run alone forces 512
+# host devices, inside its own process)
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+
+jax.config.update("jax_enable_x64", False)

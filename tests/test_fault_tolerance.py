@@ -1,0 +1,48 @@
+"""Integration: failure injection + auto-resume through the real launcher."""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+ENV = {**os.environ, "PYTHONPATH": os.path.join(REPO, "src")}
+
+
+def _run(args, check=True):
+    return subprocess.run([sys.executable, "-m", "repro.launch.train"] + args,
+                          env=ENV, capture_output=True, text=True,
+                          timeout=600, check=check)
+
+
+@pytest.mark.slow
+def test_crash_and_resume(tmp_path):
+    ckpt = str(tmp_path / "ckpt")
+    common = ["--arch", "gemma3-1b", "--reduced", "--steps", "14",
+              "--batch", "2", "--seq-len", "32",
+              "--checkpoint-dir", ckpt, "--checkpoint-every", "5"]
+    # first run crashes at step 12 (after the step-10 checkpoint)
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.train"] + common
+        + ["--fail-at-step", "12"], env=ENV, capture_output=True, text=True,
+        timeout=600)
+    assert r.returncode == 42, r.stderr[-2000:]
+    assert "INJECTED FAILURE" in r.stdout
+    # second run resumes from step 10 and completes
+    r2 = _run(common)
+    assert "resumed from step 10" in r2.stdout, r2.stdout[-2000:]
+    assert "done" in r2.stdout
+
+
+@pytest.mark.slow
+def test_grad_compression_training_converges(tmp_path):
+    metrics = str(tmp_path / "m.json")
+    r = _run(["--arch", "yi-9b", "--reduced", "--steps", "8", "--batch", "2",
+              "--seq-len", "32", "--compress-grads",
+              "--metrics-out", metrics])
+    import json
+    log = json.load(open(metrics))
+    losses = [m["loss"] for m in log]
+    assert all(np.isfinite(losses))
+    assert losses[-1] < losses[0]

@@ -1,0 +1,68 @@
+"""The trip-count-aware HLO cost model: exactness on known programs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch.hlo_analysis import analyze_hlo, shape_elems_bytes
+from repro.launch.roofline import collective_bytes
+
+
+def test_shape_bytes():
+    assert shape_elems_bytes("f32[4,8]{1,0}")[1] == 128
+    assert shape_elems_bytes("bf16[10]")[1] == 20
+    assert shape_elems_bytes("(f32[2,2], s32[3])")[1] == 28
+    assert shape_elems_bytes("pred[]")[1] == 1
+
+
+def test_scan_flops_match_unrolled():
+    def scanned(x, w):
+        def body(c, _):
+            return c @ w, None
+        out, _ = jax.lax.scan(body, x, None, length=8)
+        return out
+
+    def unrolled(x, w):
+        for _ in range(8):
+            x = x @ w
+        return x
+
+    xs = jax.ShapeDtypeStruct((64, 32), jnp.float32)
+    ws = jax.ShapeDtypeStruct((32, 32), jnp.float32)
+    fl = {}
+    for name, f in [("scan", scanned), ("unrolled", unrolled)]:
+        c = jax.jit(f).lower(xs, ws).compile()
+        fl[name] = analyze_hlo(c.as_text()).dot_flops
+    expected = 8 * 2 * 64 * 32 * 32
+    assert fl["scan"] == expected
+    assert fl["unrolled"] == expected
+
+
+def test_nested_scan_multiplier():
+    def nested(x, w):
+        def outer(c, _):
+            def inner(c2, _):
+                return c2 @ w, None
+            c2, _ = jax.lax.scan(inner, c, None, length=3)
+            return c2, None
+        out, _ = jax.lax.scan(outer, x, None, length=5)
+        return out
+
+    xs = jax.ShapeDtypeStruct((16, 16), jnp.float32)
+    ws = jax.ShapeDtypeStruct((16, 16), jnp.float32)
+    c = jax.jit(nested).lower(xs, ws).compile()
+    t = analyze_hlo(c.as_text())
+    assert t.dot_flops == 15 * 2 * 16 * 16 * 16   # 5 x 3 iterations
+
+
+def test_collective_parse():
+    hlo = """
+HloModule test
+ENTRY %main (p: f32[16]) -> f32[16] {
+  %p = f32[16]{0} parameter(0)
+  %ar = f32[16]{0} all-reduce(%p), replica_groups={}, to_apply=%add
+  ROOT %ag = f32[16]{0} all-gather(%ar), dimensions={0}
+}
+"""
+    out = collective_bytes(hlo)
+    assert out["all-reduce"] == 64
+    assert out["all-gather"] == 64

@@ -1,0 +1,130 @@
+"""Per-Pallas-kernel validation: shape/dtype sweeps vs pure-jnp oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.blur import ops as blur_ops, ref as blur_ref
+from repro.kernels.conv2d import ops as mc_ops, ref as mc_ref
+from repro.kernels.flash_attention import ops as fa_ops, ref as fa_ref
+from repro.kernels.matmul import ops as mm_ops, ref as mm_ref
+from repro.kernels.matvec import ops as mv_ops, ref as mv_ref
+from repro.kernels.maxpool import ops as mp_ops, ref as mp_ref
+
+RNG = np.random.RandomState(0)
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("m,n,k", [(64, 64, 64), (100, 70, 130),
+                                   (33, 257, 65), (1, 1, 1), (128, 1, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_matmul(m, n, k, dtype):
+    a = jnp.asarray(RNG.randn(m, k), dtype)
+    b = jnp.asarray(RNG.randn(k, n), dtype)
+    out = mm_ops.matmul(a, b, bm=32, bn=32, bk=32)
+    ref = mm_ref.matmul(a, b)
+    np.testing.assert_allclose(np.float32(out), np.float32(ref), **_tol(dtype))
+
+
+@pytest.mark.parametrize("m,k", [(64, 64), (100, 70), (257, 513), (1, 5)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_matvec(m, k, dtype):
+    a = jnp.asarray(RNG.randn(m, k), dtype)
+    x = jnp.asarray(RNG.randn(k), dtype)
+    out = mv_ops.matvec(a, x, bm=32, bk=32)
+    ref = mv_ref.matvec(a, x)
+    np.testing.assert_allclose(np.float32(out), np.float32(ref), **_tol(dtype))
+
+
+@pytest.mark.parametrize("m,n,r", [(64, 64, 3), (100, 90, 5), (41, 77, 7)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_conv2d(m, n, r, dtype):
+    a = jnp.asarray(RNG.randn(m, n), dtype)
+    w = jnp.asarray(RNG.randn(r, r), dtype)
+    out = mc_ops.conv2d(a, w, bm=16, bn=16)
+    ref = mc_ref.conv2d(a, w)
+    np.testing.assert_allclose(np.float32(out), np.float32(ref),
+                               rtol=5e-2 if dtype == jnp.bfloat16 else 1e-4,
+                               atol=5e-1 if dtype == jnp.bfloat16 else 1e-3)
+
+
+@pytest.mark.parametrize("m,n,r,s", [(64, 64, 2, 2), (100, 90, 3, 2),
+                                     (65, 43, 5, 1), (32, 32, 4, 2)])
+def test_maxpool(m, n, r, s):
+    a = jnp.asarray(RNG.randn(m, n), jnp.float32)
+    out = mp_ops.maxpool(a, r=r, s=s, bm=8, bn=8)
+    ref = mp_ref.maxpool(a, r=r, s=s)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+@pytest.mark.parametrize("m,n", [(66, 66), (128, 100), (51, 200)])
+@pytest.mark.parametrize("separable", [False, True])
+def test_blur(m, n, separable):
+    a = jnp.asarray(RNG.randn(m, n), jnp.float32)
+    out = blur_ops.blur(a, bm=16, bn=16, separable=separable)
+    ref = blur_ref.blur(a)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("h,kv", [(8, 2), (4, 4), (6, 1)])
+@pytest.mark.parametrize("causal,window", [(True, 0), (False, 0), (True, 16)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention(h, kv, causal, window, dtype):
+    b, sq, d = 2, 100, 32
+    q = jnp.asarray(RNG.randn(b, h, sq, d) * 0.5, dtype)
+    k = jnp.asarray(RNG.randn(b, kv, sq, d) * 0.5, dtype)
+    v = jnp.asarray(RNG.randn(b, kv, sq, d), dtype)
+    out = fa_ops.attention(q, k, v, causal=causal, window=window,
+                           bq=32, bk=32)
+    ref = fa_ref.attention(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.float32(out), np.float32(ref),
+                               rtol=3e-2 if dtype == jnp.bfloat16 else 1e-4,
+                               atol=3e-2 if dtype == jnp.bfloat16 else 1e-4)
+
+
+def test_flash_matches_model_attention():
+    """The kernel agrees with the model's chunked-jnp attention path."""
+    from repro.models.attention import attend_chunked
+    b, h, s, d = 2, 4, 96, 16
+    q = jnp.asarray(RNG.randn(b, s, h, d) * 0.3, jnp.float32)
+    k = jnp.asarray(RNG.randn(b, s, h, d) * 0.3, jnp.float32)
+    v = jnp.asarray(RNG.randn(b, s, h, d), jnp.float32)
+    model_out = attend_chunked(q, k, v, causal=True, k_chunk=32, q_chunk=32)
+    kern_out = fa_ops.attention(q.transpose(0, 2, 1, 3),
+                                k.transpose(0, 2, 1, 3),
+                                v.transpose(0, 2, 1, 3),
+                                causal=True, bq=32, bk=32)
+    np.testing.assert_allclose(np.asarray(model_out),
+                               np.asarray(kern_out.transpose(0, 2, 1, 3)),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("h,kv,causal,window", [(8, 2, True, 0),
+                                                (4, 4, False, 0),
+                                                (6, 1, True, 16)])
+def test_flash_attention_backward(h, kv, causal, window):
+    """The two-pass flash backward kernels match autodiff of the oracle."""
+    b, sq, d = 2, 100, 32
+    q = jnp.asarray(RNG.randn(b, h, sq, d) * 0.4, jnp.float32)
+    k = jnp.asarray(RNG.randn(b, kv, sq, d) * 0.4, jnp.float32)
+    v = jnp.asarray(RNG.randn(b, kv, sq, d), jnp.float32)
+
+    def loss_kern(q, k, v):
+        o = fa_ops.attention(q, k, v, causal=causal, window=window,
+                             bq=32, bk=32)
+        return jnp.sum(jnp.sin(o.astype(jnp.float32)))
+
+    def loss_ref(q, k, v):
+        o = fa_ref.attention(q, k, v, causal=causal, window=window)
+        return jnp.sum(jnp.sin(o.astype(jnp.float32)))
+
+    g1 = jax.grad(loss_kern, argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(loss_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b_ in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_),
+                                   rtol=1e-4, atol=1e-4)

@@ -1,0 +1,133 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.features import KERNELS, feature_vector
+from repro.core.nnc import lightweight_dims, n_params
+from repro.data.pipeline import DataConfig, batch_at
+from repro.dist.sharding import ShardingRules, train_rules
+from repro.models.attention import attend_chunked, attend_full
+from repro.optim import compression as comp
+from repro.train.step import chunked_cross_entropy, cross_entropy
+
+# --- complexity functions ----------------------------------------------------
+
+@given(st.integers(1, 1024), st.integers(1, 1024), st.integers(1, 1024))
+def test_mm_complexity_monotone(m, n, k):
+    p = {"m": m, "n": n, "k": k, "d1": 1.0, "d2": 1.0}
+    c = KERNELS["mm"].complexity(p)
+    assert c > 0
+    assert KERNELS["mm"].complexity({**p, "m": m + 1}) > c
+
+
+@given(st.integers(7, 1024), st.integers(7, 1024),
+       st.sampled_from([3, 5, 7]))
+def test_mc_complexity_positive(m, n, r):
+    c = KERNELS["mc"].complexity({"m": m, "n": n, "r": r, "d": 1.0})
+    assert c == (m - r + 1) * (n - r + 1) * r * r > 0
+
+
+@given(st.sampled_from(list(KERNELS)), st.integers(0, 1000))
+def test_feature_vector_c_is_last(kernel, seed):
+    rng = np.random.RandomState(seed)
+    p = KERNELS[kernel].sample(rng)
+    v = feature_vector(kernel, p)
+    assert v[-1] == KERNELS[kernel].complexity(p)
+    assert len(v) == len(KERNELS[kernel].param_names) + 1
+
+
+# --- lightweight model budget -------------------------------------------------
+
+@given(st.integers(3, 12), st.sampled_from([1, 2]))
+def test_lightweight_dims_budget(nf, nh):
+    dims = lightweight_dims(nf, 75, nh)
+    assert n_params(dims) <= 75
+    assert all(w >= 3 for w in dims[1:-1])
+    assert dims[0] == nf and dims[-1] == 1
+
+
+# --- sharding rules -----------------------------------------------------------
+
+class _FakeMesh:
+    def __init__(self, sizes):
+        self.axis_names = tuple(sizes)
+        import numpy as _np
+        self.devices = _np.empty(tuple(sizes.values()))
+
+
+@given(st.integers(1, 64), st.integers(1, 64))
+@settings(max_examples=25, deadline=None)
+def test_spec_divisibility_and_dedup(a, b):
+    mesh = _FakeMesh({"data": 16, "model": 16})
+    rules = train_rules()
+    spec = rules.spec(("heads", "kv_heads"), shape=(a, b), mesh=mesh)
+    used = [s for s in spec if s is not None]
+    flat = []
+    for s in used:
+        flat.extend(s if isinstance(s, tuple) else [s])
+    assert len(flat) == len(set(flat))          # no mesh axis used twice
+    if spec[0] == "model":
+        assert a % 16 == 0                       # divisibility honoured
+
+
+# --- gradient compression -------------------------------------------------------
+
+@given(st.integers(0, 100))
+@settings(max_examples=25, deadline=None)
+def test_quantize_bound_and_error_feedback(seed):
+    rng = np.random.RandomState(seed)
+    g = jnp.asarray(rng.randn(37) * rng.uniform(0.01, 10))
+    q, scale = comp.quantize(g)
+    deq = comp.dequantize(q, scale)
+    assert float(jnp.max(jnp.abs(deq - g))) <= float(scale) * 0.5 + 1e-6
+    # error feedback: residual + dequantised == original (exactly)
+    np.testing.assert_allclose(np.asarray(deq + (g - deq)), np.asarray(g),
+                               rtol=1e-6, atol=1e-7)
+
+
+# --- data pipeline determinism ---------------------------------------------------
+
+@given(st.integers(0, 10000), st.integers(0, 3))
+@settings(max_examples=10, deadline=None)
+def test_pipeline_deterministic(step, seed):
+    cfg = DataConfig(vocab_size=128, seq_len=8, global_batch=2, seed=seed)
+    b1 = batch_at(cfg, step)
+    b2 = batch_at(cfg, step)
+    np.testing.assert_array_equal(np.asarray(b1["tokens"]),
+                                  np.asarray(b2["tokens"]))
+
+
+# --- chunked CE == full CE --------------------------------------------------------
+
+@given(st.integers(1, 3), st.integers(2, 24), st.integers(3, 50),
+       st.integers(1, 16))
+@settings(max_examples=15, deadline=None)
+def test_chunked_ce_matches_full(b, s, v, chunk):
+    rng = np.random.RandomState(b * 1000 + s)
+    hidden = jnp.asarray(rng.randn(b, s, 8), jnp.float32)
+    table = jnp.asarray(rng.randn(v, 8), jnp.float32)
+    labels = jnp.asarray(rng.randint(0, v, (b, s)), jnp.int32)
+    logits = jnp.einsum("bsd,vd->bsv", hidden, table)
+    full, _ = cross_entropy(logits, labels, z_loss=1e-4)
+    ch, _ = chunked_cross_entropy(hidden, table, labels, chunk=chunk,
+                                  z_loss=1e-4)
+    np.testing.assert_allclose(float(full), float(ch), rtol=1e-5)
+
+
+# --- chunked attention == full attention -------------------------------------------
+
+@given(st.integers(1, 2), st.integers(2, 40), st.sampled_from([0, 7]),
+       st.booleans())
+@settings(max_examples=15, deadline=None)
+def test_attend_chunked_matches_full(b, s, window, causal):
+    rng = np.random.RandomState(s)
+    q = jnp.asarray(rng.randn(b, s, 2, 8) * 0.5, jnp.float32)
+    k = jnp.asarray(rng.randn(b, s, 2, 8) * 0.5, jnp.float32)
+    v = jnp.asarray(rng.randn(b, s, 2, 8), jnp.float32)
+    full = attend_full(q, k, v, causal=causal, window=window)
+    chunked = attend_chunked(q, k, v, causal=causal, window=window,
+                             k_chunk=8, q_chunk=8)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(chunked),
+                               rtol=2e-4, atol=2e-4)

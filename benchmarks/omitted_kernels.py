@@ -7,7 +7,6 @@ from __future__ import annotations
 import json
 import os
 
-import numpy as np
 
 from repro.core.nnc import make_model, mae, mape, slice_features
 from repro.perfdata.datasets import extra_combos, generate, train_test_split

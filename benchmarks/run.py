@@ -10,7 +10,6 @@ full tables go to stdout and results/*.json (consumed by EXPERIMENTS.md).
 from __future__ import annotations
 
 import argparse
-import sys
 
 import numpy as np
 
@@ -23,7 +22,7 @@ def main(argv=None) -> None:
 
     from benchmarks import paper_tables, roofline_bench, unconstrained, \
         variant_selection
-    from repro.perfdata.datasets import Combo, host_combos, paper_combos
+    from repro.perfdata.datasets import Combo
 
     epochs = 4000 if args.quick else 20000
     if args.quick:

@@ -6,7 +6,6 @@ import json
 import os
 import time
 
-import numpy as np
 
 from repro.core.nnc import make_model, mae, mape, slice_features
 from repro.perfdata.datasets import Combo, generate, train_test_split

@@ -8,7 +8,6 @@
     PYTHONPATH=src python examples/quickstart.py
 """
 import jax
-import numpy as np
 
 from repro.core.nnc import make_model, mape, slice_features
 from repro.perfdata.datasets import Combo, generate, train_test_split

@@ -7,7 +7,6 @@ time predictions enable.
 
     PYTHONPATH=src python examples/schedule_dag.py
 """
-import numpy as np
 
 from repro.core.features import feature_vector
 from repro.core.nnc import make_model, slice_features

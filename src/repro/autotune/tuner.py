@@ -9,7 +9,6 @@ candidate schedules for unseen shapes at compile time.
 from __future__ import annotations
 
 import dataclasses
-import itertools
 import time
 from typing import Optional, Sequence
 

@@ -9,9 +9,8 @@ DAG dependencies.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Optional, Sequence
+from typing import Callable, Sequence
 
-import numpy as np
 
 
 @dataclasses.dataclass(frozen=True)
@@ -33,7 +32,6 @@ def schedule(tasks: Sequence[KernelTask],
              predict: Callable[[KernelTask, str], float],
              devices: Sequence[str]) -> dict[str, Assignment]:
     """predict(task, device) -> seconds.  Returns task -> Assignment."""
-    by_name = {t.name: t for t in tasks}
     done: dict[str, Assignment] = {}
     device_free = {d: 0.0 for d in devices}
     remaining = list(tasks)

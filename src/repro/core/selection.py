@@ -8,7 +8,6 @@ serves the Pallas BlockSpec autotuner (repro/autotune).
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Optional, Sequence
 
 import numpy as np
 

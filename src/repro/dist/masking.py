@@ -1,0 +1,25 @@
+"""Shared attention-mask semantics for the dense and ring paths.
+
+One definition of visibility (causal / sliding-window / pad-sentinel) keeps
+``models.attention`` and ``dist.ring_attention`` numerically in lockstep —
+the ring is tested against the dense reference, so the two must never
+drift.  Lives in the leaf ``dist`` package so both sides can import it
+without a cycle (``repro.models.__init__`` pulls in the whole model stack).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+PAD_SENTINEL = 10 ** 9       # k positions >= this are padding (never visible)
+
+
+def mask_bias(q_pos, k_pos, causal: bool, window: int) -> jax.Array:
+    """[Sq,Sk] additive bias: 0 where visible, NEG_INF elsewhere."""
+    ok = k_pos[None, :] < PAD_SENTINEL
+    if causal:
+        ok &= k_pos[None, :] <= q_pos[:, None]
+    if window > 0:
+        ok &= q_pos[:, None] - k_pos[None, :] < window
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)

@@ -1,0 +1,97 @@
+"""Blockwise ring attention over one mesh axis (sequence parallelism).
+
+The sequence axis of q, k, v is sharded over ``axis_name``; each device
+keeps its q block resident while k/v blocks rotate around the ring with
+``jax.lax.ppermute``.  Per hop the device folds the visiting k/v block into
+an online-softmax accumulator (the same update as ``attend_chunked``), so
+peak memory is O(S/n) per device and the only collective is the neighbour
+exchange.  Numerics match the dense reference ``models.attention.attend_full``
+for causal, non-causal and sliding-window masks; uneven ``seq % n`` is
+handled by padding the sequence and masking the pad keys.
+
+The first hop processes the device's own (diagonal) block, which every query
+can see under any supported mask — the running max is finite from step one,
+so fully-masked later blocks contribute exact zeros.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.dist import compat
+from repro.dist.masking import NEG_INF, PAD_SENTINEL, mask_bias
+from repro.dist.sharding import _axis_sizes, active_mesh
+
+
+def ring_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                   mesh=None, axis_name: str = "model", causal: bool = True,
+                   window: int = 0, q_offset: int = 0) -> jax.Array:
+    """q, k, v: [B, S, H, D] (kv heads pre-expanded) -> [B, S, H, D].
+
+    ``mesh`` defaults to the active mesh; on a 1-device ring (or no mesh at
+    all) this degenerates to the chunked dense path, so callers can use it
+    unconditionally.
+    """
+    if mesh is None:
+        mesh = active_mesh()
+    b, s, h, d = q.shape
+    sizes = _axis_sizes(mesh) if mesh is not None else {}
+    n = sizes.get(axis_name, 1)
+    if mesh is None or n <= 1:
+        from repro.models.attention import attend_chunked
+        return attend_chunked(q, k, v, causal=causal, window=window,
+                              q_offset=q_offset)
+
+    pad = (-s) % n
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    s_loc = (s + pad) // n
+    scale = d ** -0.5
+
+    # shard batch over whatever data axes the mesh has (when divisible)
+    batch_axes = tuple(a for a in ("pod", "data") if a in sizes)
+    dp = 1
+    for a in batch_axes:
+        dp *= sizes[a]
+    b_spec = None
+    if batch_axes and b % dp == 0:
+        b_spec = batch_axes if len(batch_axes) > 1 else batch_axes[0]
+    spec = P(b_spec, axis_name, None, None)
+
+    def ring(q_loc, k_loc, v_loc):
+        idx = jax.lax.axis_index(axis_name)
+        bl = q_loc.shape[0]
+        offs = jnp.arange(s_loc)
+        q_pos = idx * s_loc + offs + q_offset
+        acc = jnp.zeros((bl, h, s_loc, d), jnp.float32)
+        m = jnp.full((bl, h, s_loc), NEG_INF, jnp.float32)
+        l = jnp.zeros((bl, h, s_loc), jnp.float32)
+        k_cur, v_cur = k_loc, v_loc
+        perm = [(j, (j + 1) % n) for j in range(n)]
+        for step in range(n):
+            src = (idx - step) % n            # block index k_cur came from
+            k_pos = src * s_loc + offs
+            k_pos = jnp.where(k_pos < s, k_pos, PAD_SENTINEL + k_pos)
+            sc = jnp.einsum("bshd,bthd->bhst", q_loc, k_cur
+                            ).astype(jnp.float32) * scale
+            sc = sc + mask_bias(q_pos, k_pos, causal, window)[None, None]
+            m_new = jnp.maximum(m, sc.max(axis=-1))
+            alpha = jnp.exp(m - m_new)
+            p = jnp.exp(sc - m_new[..., None])
+            l = l * alpha + p.sum(axis=-1)
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "bhst,bthd->bhsd", p.astype(q_loc.dtype), v_cur
+            ).astype(jnp.float32)
+            m = m_new
+            if step != n - 1:
+                k_cur = jax.lax.ppermute(k_cur, axis_name, perm)
+                v_cur = jax.lax.ppermute(v_cur, axis_name, perm)
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return out.transpose(0, 2, 1, 3).astype(q_loc.dtype)
+
+    out = compat.shard_map(ring, mesh, in_specs=(spec, spec, spec),
+                           out_specs=spec)(q, k, v)
+    return out[:, :s] if pad else out

@@ -194,6 +194,8 @@ def run_cell(arch_name: str, shape_name: str, *, multi_pod: bool = False,
     t_compile = time.time() - t0
 
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):      # older jax: one dict per device
+        cost = cost[0] if cost else {}
     try:
         ma = compiled.memory_analysis()
         mem = {

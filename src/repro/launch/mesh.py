@@ -6,7 +6,8 @@ never touches jax device state — smoke tests keep seeing 1 CPU device.
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+from repro.dist import compat
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -22,12 +23,9 @@ def make_production_mesh(*, multi_pod: bool = False):
             f"need {n} devices for mesh {shape}; have {len(devices)} — "
             "the dry-run sets XLA_FLAGS=--xla_force_host_platform_device_count=512 "
             "before importing jax")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes),
-                         devices=devices)
+    return compat.make_mesh(shape, axes, devices=devices)
 
 
 def make_host_mesh():
     """1x1 mesh over the single real CPU device (integration tests)."""
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(AxisType.Auto, AxisType.Auto))
+    return compat.make_mesh((1, 1), ("data", "model"))

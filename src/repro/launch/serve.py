@@ -15,8 +15,7 @@ import numpy as np
 from repro.checkpoint.manager import CheckpointManager
 from repro.configs import get_arch
 from repro.models import build_model
-from repro.serve.decode import ServeConfig, generate, make_prefill_step, \
-    make_serve_step
+from repro.serve.decode import ServeConfig, generate
 
 
 def main(argv=None):

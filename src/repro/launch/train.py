@@ -24,7 +24,6 @@ import sys
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.checkpoint.manager import CheckpointManager
 from repro.configs import get_arch
@@ -70,6 +69,9 @@ def main(argv=None):
     ap.add_argument("--fail-at-step", type=int, default=-1,
                     help="failure injection: crash at this step")
     ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--data-parallel", action="store_true",
+                    help="shard the batch over all local devices "
+                         "(1-D 'data' mesh + train_rules)")
     ap.add_argument("--async-checkpoint", action="store_true",
                     help="serialize checkpoints on a background thread")
     ap.add_argument("--metrics-out", default=None)
@@ -85,8 +87,19 @@ def main(argv=None):
                                ce_seq_chunk=min(512, args.seq_len))
     optimizer = AdamW(learning_rate=warmup_cosine(args.lr, args.warmup,
                                                   args.steps))
-    train_step = jax.jit(make_train_step(model, optimizer, step_cfg),
-                         donate_argnums=(0, 1))
+    base_step = make_train_step(model, optimizer, step_cfg)
+    if args.data_parallel:
+        from repro.dist import compat
+        mesh = compat.make_mesh((jax.device_count(),), ("data",))
+        rules = shd.train_rules()
+
+        def dp_step(params, opt_state, batch, *rest):
+            with shd.use_mesh(mesh, rules):
+                return base_step(params, opt_state, batch, *rest)
+
+        train_step = jax.jit(dp_step, donate_argnums=(0, 1))
+    else:
+        train_step = jax.jit(base_step, donate_argnums=(0, 1))
 
     params = model.init_params(jax.random.PRNGKey(args.seed))
     opt_state = optimizer.init(params)

@@ -19,11 +19,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
+from repro.dist.masking import (NEG_INF, PAD_SENTINEL as _PAD_SENTINEL,
+                                mask_bias as _mask_bias)
 from repro.dist.sharding import constrain
 from repro.models.layers import rope
 from repro.models.module import ParamSpec
-
-NEG_INF = -1e30
 
 
 def attention_spec(cfg: ArchConfig, cross: bool = False) -> dict:
@@ -56,19 +56,6 @@ def _expand_kv(k: jax.Array, n_heads: int) -> jax.Array:
         return k
     rep = n_heads // kv
     return jnp.repeat(k, rep, axis=2)
-
-
-_PAD_SENTINEL = 10 ** 9      # k positions >= this are padding (never visible)
-
-
-def _mask_bias(q_pos, k_pos, causal: bool, window: int) -> jax.Array:
-    """[Sq,Sk] additive bias: 0 where visible, NEG_INF elsewhere."""
-    ok = k_pos[None, :] < _PAD_SENTINEL
-    if causal:
-        ok &= k_pos[None, :] <= q_pos[:, None]
-    if window > 0:
-        ok &= q_pos[:, None] - k_pos[None, :] < window
-    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
 
 
 def attend_full(q, k, v, *, causal: bool, window: int = 0,

@@ -6,8 +6,6 @@ parameters, matching production mixed-precision practice.
 """
 from __future__ import annotations
 
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
 

@@ -198,7 +198,6 @@ def moe_apply_shardmap(cfg: ArchConfig, params: dict, x: jax.Array
     e_loc = e // model_n
     nl = (b // dp) * s
     cap = max(4, int(nl * k * cfg.capacity_factor / e))
-    f = cfg.expert_d_ff
 
     x_spec = P(batch_axes if len(batch_axes) > 1 else batch_axes[0],
                None, None)
@@ -273,8 +272,9 @@ def moe_apply_shardmap(cfg: ArchConfig, params: dict, x: jax.Array
         args += [params["shared"]["w_gate"], params["shared"]["w_up"],
                  params["shared"]["w_down"]]
         in_specs += list(shared_specs)
-    y, aux = jax.shard_map(inner, mesh=mesh, in_specs=tuple(in_specs),
-                           out_specs=(x_spec, P()), check_vma=False)(*args)
+    from repro.dist import compat
+    y, aux = compat.shard_map(inner, mesh, in_specs=tuple(in_specs),
+                              out_specs=(x_spec, P()))(*args)
     return y, aux
 
 

@@ -7,7 +7,7 @@ server, and the dry-run (ShapeDtypeStructs only).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -16,7 +16,7 @@ from repro.configs.base import ArchConfig, ShapeConfig
 from repro.dist.sharding import constrain
 from repro.models import transformer as tfm
 from repro.models.layers import apply_norm, embed, embedding_spec, norm_spec, unembed
-from repro.models.module import ParamSpec, shape_tree
+from repro.models.module import ParamSpec
 
 
 @dataclasses.dataclass(frozen=True)

@@ -11,7 +11,6 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
-from repro.dist.sharding import constrain
 from repro.models.module import ParamSpec
 
 

@@ -8,20 +8,17 @@ per unique block kind) with a remat'ed body; the remainder (e.g. gemma3's
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
-from repro.dist.sharding import constrain
 from repro.models import attention as attn
 from repro.models import moe as moe_mod
 from repro.models import ssm as ssm_mod
 from repro.models import xlstm as xlstm_mod
-from repro.models.layers import (apply_norm, embed, embedding_spec, mlp,
-                                 mlp_spec, norm_spec, unembed)
+from repro.models.layers import apply_norm, mlp, mlp_spec, norm_spec
 from repro.models.module import ParamSpec, stack_tree
 
 # ---------------------------------------------------------------------------

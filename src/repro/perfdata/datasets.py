@@ -8,7 +8,6 @@ Generated datasets are cached under results/perfdata/.
 from __future__ import annotations
 
 import dataclasses
-import json
 import os
 from typing import Optional
 

@@ -9,8 +9,6 @@ big-vocab models).
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp

@@ -1,0 +1,61 @@
+"""Minimal stand-in for the ``hypothesis`` API used by this test suite.
+
+Installed into ``sys.modules`` by ``conftest.py`` ONLY when the real
+package is absent (the CI image installs real hypothesis; some local images
+do not).  Strategies are modelled as callables drawing from a seeded
+``random.Random``, and ``@given`` runs the test body over a fixed number of
+deterministic samples — no shrinking, no database, same assertions.
+"""
+from __future__ import annotations
+
+import random
+
+_DEFAULT_EXAMPLES = 25
+
+
+class strategies:
+    """The subset of ``hypothesis.strategies`` this suite uses."""
+
+    @staticmethod
+    def integers(min_value, max_value):
+        return lambda rng: rng.randint(min_value, max_value)
+
+    @staticmethod
+    def sampled_from(options):
+        options = list(options)
+        return lambda rng: rng.choice(options)
+
+    @staticmethod
+    def booleans():
+        return lambda rng: bool(rng.getrandbits(1))
+
+
+class settings:
+    """Decorator recording max_examples; other knobs are accepted+ignored."""
+
+    def __init__(self, max_examples=_DEFAULT_EXAMPLES, **_ignored):
+        self.max_examples = max_examples
+
+    def __call__(self, fn):
+        fn._stub_max_examples = self.max_examples
+        return fn
+
+
+def given(*strats, **kwstrats):
+    def decorate(fn):
+        def wrapper():
+            n = getattr(wrapper, "_stub_max_examples",
+                        getattr(fn, "_stub_max_examples", _DEFAULT_EXAMPLES))
+            rng = random.Random(0xC0FFEE)
+            for _ in range(n):
+                drawn = tuple(s(rng) for s in strats)
+                drawn_kw = {k: s(rng) for k, s in kwstrats.items()}
+                fn(*drawn, **drawn_kw)
+        # NOT functools.wraps: pytest must see a zero-arg signature, or it
+        # treats the hypothesis-drawn parameters as fixtures
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        wrapper.__dict__.update(fn.__dict__)
+        return wrapper
+    return decorate

@@ -38,7 +38,7 @@ def test_crash_and_resume(tmp_path):
 @pytest.mark.slow
 def test_grad_compression_training_converges(tmp_path):
     metrics = str(tmp_path / "m.json")
-    r = _run(["--arch", "yi-9b", "--reduced", "--steps", "8", "--batch", "2",
+    _run(["--arch", "yi-9b", "--reduced", "--steps", "8", "--batch", "2",
               "--seq-len", "32", "--compress-grads",
               "--metrics-out", metrics])
     import json

@@ -1,7 +1,6 @@
 """The trip-count-aware HLO cost model: exactness on known programs."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.launch.hlo_analysis import analyze_hlo, shape_elems_bytes
 from repro.launch.roofline import collective_bytes

@@ -15,14 +15,13 @@ SCRIPT = textwrap.dedent("""
     import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
     import jax, jax.numpy as jnp, numpy as np, dataclasses
-    from jax.sharding import AxisType
     from repro.configs import ARCHS
+    from repro.dist.compat import make_mesh
     from repro.models import module
     from repro.models.moe import moe_apply, moe_reference, moe_spec
     from repro.dist import sharding as shd
 
-    mesh = jax.make_mesh((2, 2), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+    mesh = make_mesh((2, 2), ("data", "model"))
     for name in ["qwen3-moe-235b-a22b", "llama4-maverick-400b-a17b"]:
         cfg = dataclasses.replace(
             ARCHS[name].reduced(), compute_dtype="float32",

@@ -2,7 +2,7 @@
 import numpy as np
 import pytest
 
-from repro.core.nnc import (LinearModel, MLPModel, lightweight_dims,
+from repro.core.nnc import (MLPModel, lightweight_dims,
                             make_model, mape, n_params, slice_features)
 from repro.core.scheduler import KernelTask, makespan, schedule
 from repro.core.selection import VariantSelector, evaluate_selection

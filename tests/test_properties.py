@@ -1,5 +1,4 @@
 """Hypothesis property tests on system invariants."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 from hypothesis import given, settings, strategies as st
@@ -7,7 +6,7 @@ from hypothesis import given, settings, strategies as st
 from repro.core.features import KERNELS, feature_vector
 from repro.core.nnc import lightweight_dims, n_params
 from repro.data.pipeline import DataConfig, batch_at
-from repro.dist.sharding import ShardingRules, train_rules
+from repro.dist.sharding import train_rules
 from repro.models.attention import attend_chunked, attend_full
 from repro.optim import compression as comp
 from repro.train.step import chunked_cross_entropy, cross_entropy

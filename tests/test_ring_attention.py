@@ -1,4 +1,11 @@
-"""Ring attention vs the full-attention oracle, on a real 4-device mesh."""
+"""Ring attention vs the full-attention oracle.
+
+The single-device case runs in-process (the ring degenerates to the chunked
+dense path).  The multi-device cases run on a real 4-device host mesh in a
+subprocess because XLA_FLAGS must be set before jax imports; the script
+sweeps causal/non-causal, sliding-window, and uneven ``seq % devices``
+(which exercises the pad-and-mask path inside the shard_map body).
+"""
 import os
 import subprocess
 import sys
@@ -8,35 +15,63 @@ import pytest
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
+# (causal, window) — single source for both the in-process parametrization
+# and the subprocess script, so the two paths always test the same coverage
+CASES = [(True, 0), (False, 0), (True, 8)]
+
 SCRIPT = textwrap.dedent("""
     import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
     import jax, jax.numpy as jnp, numpy as np
-    from jax.sharding import AxisType
+    from repro.dist.compat import make_mesh
     from repro.dist.ring_attention import ring_attention
     from repro.models.attention import attend_full
 
-    mesh = jax.make_mesh((4,), ("model",), axis_types=(AxisType.Auto,))
+    mesh = make_mesh((4,), ("model",))
     rng = np.random.RandomState(0)
-    for causal, window in [(True, 0), (False, 0), (True, 8)]:
-        b, s, h, d = 2, 32, 3, 16
-        q = jnp.asarray(rng.randn(b, s, h, d) * 0.4, jnp.float32)
-        k = jnp.asarray(rng.randn(b, s, h, d) * 0.4, jnp.float32)
-        v = jnp.asarray(rng.randn(b, s, h, d), jnp.float32)
-        out = jax.jit(lambda q, k, v: ring_attention(
-            q, k, v, mesh=mesh, causal=causal, window=window))(q, k, v)
-        ref = attend_full(q, k, v, causal=causal, window=window)
-        err = float(jnp.max(jnp.abs(out - ref)))
-        assert err < 2e-5, (causal, window, err)
-        # differentiable through the ring (ppermute transposes correctly)
-        g = jax.grad(lambda q: jnp.sum(ring_attention(
-            q, k, v, mesh=mesh, causal=causal, window=window) ** 2))(q)
-        g2 = jax.grad(lambda q: jnp.sum(attend_full(
-            q, k, v, causal=causal, window=window) ** 2))(q)
-        gerr = float(jnp.max(jnp.abs(g - g2)))
-        assert gerr < 5e-5, (causal, window, gerr)
+    for causal, window in CASES:
+        for s in (32, 30):                      # 30 % 4 != 0: padded ring
+            b, h, d = 2, 3, 16
+            q = jnp.asarray(rng.randn(b, s, h, d) * 0.4, jnp.float32)
+            k = jnp.asarray(rng.randn(b, s, h, d) * 0.4, jnp.float32)
+            v = jnp.asarray(rng.randn(b, s, h, d), jnp.float32)
+            out = jax.jit(lambda q, k, v: ring_attention(
+                q, k, v, mesh=mesh, causal=causal, window=window))(q, k, v)
+            ref = attend_full(q, k, v, causal=causal, window=window)
+            err = float(jnp.max(jnp.abs(out - ref)))
+            assert err < 2e-5, (causal, window, s, err)
+            # differentiable through the ring (ppermute transposes correctly)
+            g = jax.grad(lambda q: jnp.sum(ring_attention(
+                q, k, v, mesh=mesh, causal=causal, window=window) ** 2))(q)
+            g2 = jax.grad(lambda q: jnp.sum(attend_full(
+                q, k, v, causal=causal, window=window) ** 2))(q)
+            gerr = float(jnp.max(jnp.abs(g - g2)))
+            assert gerr < 5e-5, (causal, window, s, gerr)
     print("RING_OK")
-""")
+""").replace("CASES", repr(CASES))
+
+
+@pytest.mark.parametrize("causal,window", CASES)
+@pytest.mark.parametrize("seq", [32, 30])
+def test_ring_attention_single_device(causal, window, seq):
+    """1-device ring == dense attention, no forced device count needed."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.dist.compat import make_mesh
+    from repro.dist.ring_attention import ring_attention
+    from repro.models.attention import attend_full
+
+    mesh = make_mesh((1,), ("model",))
+    rng = np.random.RandomState(1)
+    b, h, d = 2, 3, 16
+    q = jnp.asarray(rng.randn(b, seq, h, d) * 0.4, jnp.float32)
+    k = jnp.asarray(rng.randn(b, seq, h, d) * 0.4, jnp.float32)
+    v = jnp.asarray(rng.randn(b, seq, h, d), jnp.float32)
+    out = jax.jit(lambda q, k, v: ring_attention(
+        q, k, v, mesh=mesh, causal=causal, window=window))(q, k, v)
+    ref = attend_full(q, k, v, causal=causal, window=window)
+    assert float(jnp.max(jnp.abs(out - ref))) < 2e-5
 
 
 @pytest.mark.slow

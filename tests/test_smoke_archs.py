@@ -1,7 +1,5 @@
 """Per-architecture smoke tests: reduced configs, one forward + one train
 step on CPU, asserting output shapes and finiteness (deliverable f)."""
-import dataclasses
-
 import jax
 import jax.numpy as jnp
 import numpy as np

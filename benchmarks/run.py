@@ -63,6 +63,12 @@ def main(argv=None) -> None:
         for line in roofline_bench.summarize(roof):
             print(line)
 
+    from benchmarks import runtime_overhead
+    rt = runtime_overhead.run(quick=args.quick)
+    print()
+    for line in runtime_overhead.summarize(rt):
+        print(line)
+
     # machine-readable trailer: name,us_per_call,derived
     print()
     print("name,us_per_call,derived")
@@ -84,6 +90,12 @@ def main(argv=None) -> None:
     if roof:
         ok = sum(1 for k, v in roof.items() if v.get("ok"))
         print(f"dryrun_cells_ok,{ok},both_meshes")
+    if rt:
+        regrets = [c["regret_vs_oracle"] for c in rt["cases"].values()]
+        print(f"runtime_dispatch_overhead_pct,{rt['steady_overhead_pct']:.2f},"
+              f"target_lt_5pct")
+        print(f"runtime_mean_regret_vs_oracle,{np.mean(regrets):.3f},"
+              f"oracle_is_1.0")
 
 
 if __name__ == "__main__":

@@ -32,8 +32,16 @@ def _features(b, h, s, d, qc, kc):
 
 
 def measure_schedule(b, h, s, d, qc, kc, reps: int = 2,
-                     rng: Optional[np.random.RandomState] = None) -> float:
-    rng = rng or np.random.RandomState(0)
+                     rng: Optional[np.random.RandomState] = None,
+                     seed: Optional[int] = None) -> float:
+    """Wall-time one (q_chunk, k_chunk) schedule on this host.
+
+    The noise source is explicit: pass ``rng`` (or ``seed``) to reproduce a
+    measurement run; the default draws fresh OS entropy so *repeated* tuning
+    runs see independent measurement noise instead of silently re-timing the
+    same module-level RandomState(0) inputs."""
+    if rng is None:
+        rng = np.random.RandomState(seed)
     q = jnp.asarray(rng.randn(b, s, h, d) * 0.3, jnp.float32)
     k = jnp.asarray(rng.randn(b, s, h, d) * 0.3, jnp.float32)
     v = jnp.asarray(rng.randn(b, s, h, d), jnp.float32)
@@ -53,9 +61,13 @@ class AttentionTuner:
     model: Optional[MLPModel] = None
 
     def collect(self, shapes: Sequence[tuple], schedules=None,
-                verbose: bool = False) -> tuple[np.ndarray, np.ndarray]:
+                verbose: bool = False,
+                seed: Optional[int] = None) -> tuple[np.ndarray, np.ndarray]:
+        """Measure every (shape, schedule) pair.  ``seed`` pins the input
+        noise for reproducible collection; ``None`` (default) uses fresh
+        entropy per run."""
         schedules = schedules or SCHEDULES
-        rng = np.random.RandomState(0)
+        rng = np.random.RandomState(seed)
         X, y = [], []
         for (b, h, s, d) in shapes:
             for (qc, kc) in schedules:

@@ -13,6 +13,7 @@ LR (linear on the NN features), NLR (same net as NN with tanh).
 from __future__ import annotations
 
 import dataclasses
+import json
 from typing import Optional, Sequence
 
 import jax
@@ -25,7 +26,20 @@ def n_params(layers: Sequence[int]) -> int:
                for i in range(len(layers) - 1))
 
 
-def log_size_features(X: np.ndarray) -> np.ndarray:
+def wide_columns(X: np.ndarray) -> list[int]:
+    """Columns that should be log-scaled: wide-range (c-like) or densities."""
+    cols = []
+    for j in range(X.shape[1]):
+        col = X[:, j]
+        wide = col.max() > 2048                    # c-like column
+        density = col.max() <= 1.0 and col.min() > 0 and col.min() < 1 / 64
+        if wide or density:                        # multiplicative features
+            cols.append(j)
+    return cols
+
+
+def log_size_features(X: np.ndarray,
+                      cols: Optional[Sequence[int]] = None) -> np.ndarray:
     """Log-scale only the *wide-range* columns (c and other >2048-range
     features); dims/densities/threads stay raw.
 
@@ -35,14 +49,16 @@ def log_size_features(X: np.ndarray) -> np.ndarray:
     scale.  Raw dims stay raw: a 75-weight ReLU net cannot synthesise
     log(m*n*k) from {m,n,k} (that inability is precisely why feeding c helps,
     the paper's central claim).  The paper does not specify its scaling;
-    this is the minimal choice that reaches its reported accuracy regime."""
+    this is the minimal choice that reaches its reported accuracy regime.
+
+    ``cols`` pins the column set (fitted models store the set chosen at fit
+    time so a single-row predict — the runtime-dispatch hot path — scales
+    identically to the training batch); ``None`` infers it from ``X``."""
+    if cols is None:
+        cols = wide_columns(X)
     Xl = X.astype(np.float64).copy()
-    for j in range(X.shape[1]):
-        col = X[:, j]
-        wide = col.max() > 2048                    # c-like column
-        density = col.max() <= 1.0 and col.min() > 0 and col.min() < 1 / 64
-        if wide or density:                        # multiplicative features
-            Xl[:, j] = np.log(np.maximum(col, 1e-12))
+    for j in cols:
+        Xl[:, j] = np.log(np.maximum(X[:, j], 1e-12))
     return Xl
 
 
@@ -93,6 +109,7 @@ class MLPModel:
     y_std: float = 1.0
     y_lo: float = -1e30
     y_hi: float = 1e30
+    log_cols: Optional[list] = None
     train_seconds: float = 0.0
 
     @property
@@ -120,11 +137,20 @@ class MLPModel:
 
     n_restarts: int = 3
 
-    def fit(self, X: np.ndarray, y: np.ndarray) -> "MLPModel":
+    def fit(self, X: np.ndarray, y: np.ndarray, *,
+            warm_start: bool = False) -> "MLPModel":
+        """Full-batch fit.  ``warm_start=True`` resumes from the current
+        fitted weights (one run, no restarts) — the online-refinement path,
+        where a handful of new rows should nudge, not re-randomise, the
+        model."""
         import time
         t0 = time.time()
+        init_params = None
+        if warm_start and self.params is not None:
+            init_params = jax.tree.map(jnp.asarray, self.params)
         if self.log_inputs:
-            X = log_size_features(X)
+            self.log_cols = wide_columns(X)
+            X = log_size_features(X, self.log_cols)
         if self.log_target:
             y = np.log(np.maximum(y, 1e-12))
         self.x_mean = X.mean(axis=0)
@@ -169,18 +195,21 @@ class MLPModel:
             return jnp.mean(jnp.square(self._forward(p, Xv) - yv))
 
         @jax.jit
-        def train_one(rng):
-            params = self._init(rng)
+        def train_one(params):
             zeros = jax.tree.map(jnp.zeros_like, params)
             (params, _, _, _), losses = jax.lax.scan(
                 adam_step, (params, zeros, zeros, jnp.zeros((), jnp.float32)),
                 None, length=self.epochs)
             return params, losses[-1], val_loss(params)
 
+        if init_params is not None:
+            starts = [init_params]           # warm start: resume, no restarts
+        else:
+            starts = [self._init(jax.random.PRNGKey(self.seed + 1000 * r))
+                      for r in range(self.n_restarts)]  # dead-ReLU insurance
         best = None
-        for r in range(self.n_restarts):     # dead-ReLU insurance
-            params, loss, vloss = train_one(
-                jax.random.PRNGKey(self.seed + 1000 * r))
+        for p0 in starts:
+            params, loss, vloss = train_one(p0)
             vloss = float(vloss)
             if best is None or vloss < best[2]:
                 best = (params, float(loss), vloss)
@@ -191,12 +220,64 @@ class MLPModel:
 
     def predict(self, X: np.ndarray) -> np.ndarray:
         if self.log_inputs:
-            X = log_size_features(X)
+            X = log_size_features(X, self.log_cols)
         Xs = jnp.asarray((X - self.x_mean) / self.x_std, jnp.float32)
         pred = np.asarray(self._forward(
             jax.tree.map(jnp.asarray, self.params), Xs)) * self.y_std + self.y_mean
         pred = np.clip(pred, self.y_lo, self.y_hi)
         return np.exp(pred) if self.log_target else pred
+
+    def predict_np(self, X: np.ndarray) -> np.ndarray:
+        """Pure-numpy forward (same float32 math as ``predict``) — the
+        runtime-dispatch hot path: a <=75-weight forward on a handful of rows
+        costs microseconds here vs. milliseconds of per-call jnp dispatch."""
+        if self.log_inputs:
+            X = log_size_features(X, self.log_cols)
+        h = ((X - self.x_mean) / self.x_std).astype(np.float32)
+        for i, (w, b) in enumerate(self.params):
+            h = h @ np.asarray(w) + np.asarray(b)
+            if i < len(self.params) - 1:
+                h = np.maximum(h, 0.0) if self.activation == "relu" \
+                    else np.tanh(h)
+        pred = h[..., 0].astype(np.float64) * self.y_std + self.y_mean
+        pred = np.clip(pred, self.y_lo, self.y_hi)
+        return np.exp(pred) if self.log_target else pred
+
+    # -- persistence (npz/JSON round-trip, see save_model/load_model) --------
+    def to_state(self) -> tuple[dict, dict]:
+        if self.params is None:
+            raise ValueError("cannot persist an unfitted MLPModel")
+        meta = {"kind": "mlp", "layers": list(self.layers),
+                "activation": self.activation,
+                "learning_rate": self.learning_rate, "epochs": self.epochs,
+                "seed": self.seed, "log_inputs": self.log_inputs,
+                "log_target": self.log_target, "y_mean": self.y_mean,
+                "y_std": self.y_std, "y_lo": self.y_lo, "y_hi": self.y_hi,
+                "log_cols": self.log_cols, "n_restarts": self.n_restarts,
+                "train_seconds": self.train_seconds}
+        arrays = {"x_mean": np.asarray(self.x_mean),
+                  "x_std": np.asarray(self.x_std)}
+        for i, (w, b) in enumerate(self.params):
+            arrays[f"w{i}"] = np.asarray(w)
+            arrays[f"b{i}"] = np.asarray(b)
+        return meta, arrays
+
+    @classmethod
+    def from_state(cls, meta: dict, arrays: dict) -> "MLPModel":
+        m = cls(layers=list(meta["layers"]), activation=meta["activation"],
+                learning_rate=meta["learning_rate"], epochs=meta["epochs"],
+                seed=meta["seed"], log_inputs=meta["log_inputs"],
+                log_target=meta["log_target"])
+        m.n_restarts = meta["n_restarts"]
+        m.y_mean, m.y_std = meta["y_mean"], meta["y_std"]
+        m.y_lo, m.y_hi = meta["y_lo"], meta["y_hi"]
+        m.log_cols = meta.get("log_cols")
+        m.train_seconds = meta.get("train_seconds", 0.0)
+        m.x_mean = np.asarray(arrays["x_mean"])
+        m.x_std = np.asarray(arrays["x_std"])
+        m.params = [(np.asarray(arrays[f"w{i}"]), np.asarray(arrays[f"b{i}"]))
+                    for i in range(len(m.layers) - 1)]
+        return m
 
 
 @dataclasses.dataclass
@@ -211,13 +292,15 @@ class LinearModel:
     x_std: Optional[np.ndarray] = None
     y_lo: float = -1e30
     y_hi: float = 1e30
+    log_cols: Optional[list] = None
     train_seconds: float = 0.0
 
     def fit(self, X: np.ndarray, y: np.ndarray) -> "LinearModel":
         import time
         t0 = time.time()
         if self.log_inputs:
-            X = log_size_features(X)
+            self.log_cols = wide_columns(X)
+            X = log_size_features(X, self.log_cols)
         if self.log_target:
             y = np.log(np.maximum(y, 1e-12))
         self.y_lo = float(y.min()) - 2.0
@@ -233,11 +316,70 @@ class LinearModel:
 
     def predict(self, X: np.ndarray) -> np.ndarray:
         if self.log_inputs:
-            X = log_size_features(X)
+            X = log_size_features(X, self.log_cols)
         Xs = (X - self.x_mean) / self.x_std
         A = np.concatenate([Xs, np.ones((len(Xs), 1))], axis=1)
         pred = np.clip(A @ self.coef, self.y_lo, self.y_hi)
         return np.exp(pred) if self.log_target else pred
+
+    predict_np = predict                     # already pure numpy
+
+    def to_state(self) -> tuple[dict, dict]:
+        if self.coef is None:
+            raise ValueError("cannot persist an unfitted LinearModel")
+        meta = {"kind": "linear", "ridge": self.ridge,
+                "log_inputs": self.log_inputs, "log_target": self.log_target,
+                "y_lo": self.y_lo, "y_hi": self.y_hi,
+                "log_cols": self.log_cols,
+                "train_seconds": self.train_seconds}
+        arrays = {"coef": np.asarray(self.coef),
+                  "x_mean": np.asarray(self.x_mean),
+                  "x_std": np.asarray(self.x_std)}
+        return meta, arrays
+
+    @classmethod
+    def from_state(cls, meta: dict, arrays: dict) -> "LinearModel":
+        m = cls(ridge=meta["ridge"], log_inputs=meta["log_inputs"],
+                log_target=meta["log_target"])
+        m.y_lo, m.y_hi = meta["y_lo"], meta["y_hi"]
+        m.log_cols = meta.get("log_cols")
+        m.train_seconds = meta.get("train_seconds", 0.0)
+        m.coef = np.asarray(arrays["coef"])
+        m.x_mean = np.asarray(arrays["x_mean"])
+        m.x_std = np.asarray(arrays["x_std"])
+        return m
+
+
+# --------------------------------------------------------------------------
+# Fitted-model persistence: meta -> JSON, weights/scalers -> npz.  The
+# runtime tuning cache embeds these states in its own files; the path-based
+# helpers are the standalone round-trip (fit -> save -> load -> identical
+# predictions).
+# --------------------------------------------------------------------------
+
+def model_from_state(meta: dict, arrays: dict):
+    if meta.get("kind") == "mlp":
+        return MLPModel.from_state(meta, arrays)
+    if meta.get("kind") == "linear":
+        return LinearModel.from_state(meta, arrays)
+    raise ValueError(f"unknown model kind {meta.get('kind')!r}")
+
+
+def save_model(model, path: str) -> None:
+    """Writes ``path.json`` (hyperparams + scalars) and ``path.npz``
+    (weights + z-score scalers)."""
+    meta, arrays = model.to_state()
+    with open(path + ".json", "w") as f:
+        json.dump(meta, f, indent=1)
+    np.savez(path + ".npz", **arrays)
+
+
+def load_model(path: str):
+    with open(path + ".json") as f:
+        meta = json.load(f)
+    with np.load(path + ".npz") as z:
+        arrays = {k: z[k] for k in z.files}
+    return model_from_state(meta, arrays)
 
 
 # --------------------------------------------------------------------------

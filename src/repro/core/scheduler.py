@@ -60,3 +60,22 @@ def schedule(tasks: Sequence[KernelTask],
 
 def makespan(assignments: dict[str, Assignment]) -> float:
     return max(a.finish for a in assignments.values())
+
+
+def predictor_from_runtime(dispatchers: dict[str, object]
+                           ) -> Callable[[KernelTask, str], float]:
+    """Build ``predict(task, device)`` from per-device runtime dispatchers.
+
+    Each value is a ``repro.runtime.Dispatcher`` (duck-typed: anything with
+    ``predict_time(kernel, params) -> seconds``) whose tuning cache carries
+    that device's fingerprint — so the scheduler's absolute-time estimates
+    come from the same persisted NN+C state the dispatch path uses, not an
+    ad-hoc table.  Raises ``ValueError`` on a cold cache: a scheduler fed
+    unfitted predictions would silently produce garbage mappings.
+    """
+    def predict(task: KernelTask, device: str) -> float:
+        if device not in dispatchers:
+            raise KeyError(f"no dispatcher for device {device!r}")
+        return float(dispatchers[device].predict_time(task.kernel,
+                                                      task.params))
+    return predict

@@ -1,3 +1,30 @@
 # OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
+"""Shared kernel-dispatch policy helpers."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+# backends whose Pallas lowering is compiled, not interpreted
+_COMPILED_BACKENDS = ("gpu", "cuda", "rocm", "tpu")
+
+
+def default_interpret(backend: Optional[str] = None) -> bool:
+    """Whether Pallas kernels should default to interpret mode.
+
+    On CPU (this container, most CI) there is no Pallas lowering, so kernels
+    must run interpreted; on GPU/TPU the compiled path is the whole point.
+    Every ``ops.py`` entry point takes ``interpret=None`` and resolves it
+    here, so callers only ever override deliberately (e.g. debugging a
+    miscompile with ``interpret=True`` on an accelerator).
+    """
+    backend = backend or jax.default_backend()
+    return backend not in _COMPILED_BACKENDS
+
+
+def resolve_interpret(interpret: Optional[bool]) -> bool:
+    """``None`` -> backend-derived default; explicit bools pass through."""
+    return default_interpret() if interpret is None else bool(interpret)

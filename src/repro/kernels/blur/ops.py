@@ -8,20 +8,23 @@ real runtime differences) for the Fig-4 variant-selection benchmark.
 from __future__ import annotations
 
 import time
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels import resolve_interpret
 from repro.kernels.blur import blur as _kernel
 from repro.kernels.blur import ref as _ref
 
 
 def blur(a: jax.Array, *, bm: int = 128, bn: int = 128,
          separable: bool = False, use_kernel: bool = True,
-         interpret: bool = True) -> jax.Array:
+         interpret: Optional[bool] = None) -> jax.Array:
     if not use_kernel:
         return _ref.blur(a)
+    interpret = resolve_interpret(interpret)
     m, n = a.shape
     om, on = m - 2, n - 2
     pm, pn = (-om) % bm, (-on) % bn

@@ -1,17 +1,22 @@
 """Public conv2d op: pads the *output* grid to block multiples."""
 from __future__ import annotations
 
+from typing import Optional
+
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import resolve_interpret
 from repro.kernels.conv2d import conv2d as _kernel
 from repro.kernels.conv2d import ref as _ref
 
 
 def conv2d(a: jax.Array, w: jax.Array, *, bm: int = 128, bn: int = 128,
-           use_kernel: bool = True, interpret: bool = True) -> jax.Array:
+           use_kernel: bool = True,
+           interpret: Optional[bool] = None) -> jax.Array:
     if not use_kernel:
         return _ref.conv2d(a, w)
+    interpret = resolve_interpret(interpret)
     m, n = a.shape
     r = w.shape[0]
     om, on = m - r + 1, n - r + 1

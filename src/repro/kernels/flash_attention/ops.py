@@ -8,10 +8,12 @@ backward ever materialises the [Sq, Sk] score matrix in HBM.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import resolve_interpret
 from repro.kernels.flash_attention import flash_attention as _kernel
 from repro.kernels.flash_attention import ref as _ref
 
@@ -69,9 +71,12 @@ _attention.defvjp(_attention_fwd, _attention_bwd)
 def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
               causal: bool = True, window: int = 0,
               bq: int = 256, bk: int = 256,
-              use_kernel: bool = True, interpret: bool = True) -> jax.Array:
+              use_kernel: bool = True,
+              interpret: Optional[bool] = None) -> jax.Array:
     if not use_kernel:
         return _ref.attention(q, k, v, causal=causal, window=window)
+    # resolve here: interpret is a static nondiff arg of the custom_vjp
+    interpret = resolve_interpret(interpret)
     sq = q.shape[2]
     bq = min(bq, sq) if sq % min(bq, sq) == 0 else bq
     return _attention(q, k, v, causal, window, bq, bk, interpret)

@@ -1,18 +1,22 @@
 """Public matmul op: pads to block multiples, dispatches kernel or oracle."""
 from __future__ import annotations
 
+from typing import Optional
+
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import resolve_interpret
 from repro.kernels.matmul import matmul as _kernel
 from repro.kernels.matmul import ref as _ref
 
 
 def matmul(a: jax.Array, b: jax.Array, *, bm: int = 128, bn: int = 128,
            bk: int = 128, use_kernel: bool = True,
-           interpret: bool = True) -> jax.Array:
+           interpret: Optional[bool] = None) -> jax.Array:
     if not use_kernel:
         return _ref.matmul(a, b)
+    interpret = resolve_interpret(interpret)
     m, k = a.shape
     _, n = b.shape
     pm, pn, pk = (-m) % bm, (-n) % bn, (-k) % bk

@@ -1,17 +1,22 @@
 """Public matvec op with padding + dispatch."""
 from __future__ import annotations
 
+from typing import Optional
+
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import resolve_interpret
 from repro.kernels.matvec import matvec as _kernel
 from repro.kernels.matvec import ref as _ref
 
 
 def matvec(a: jax.Array, x: jax.Array, *, bm: int = 256, bk: int = 512,
-           use_kernel: bool = True, interpret: bool = True) -> jax.Array:
+           use_kernel: bool = True,
+           interpret: Optional[bool] = None) -> jax.Array:
     if not use_kernel:
         return _ref.matvec(a, x)
+    interpret = resolve_interpret(interpret)
     m, k = a.shape
     pm, pk = (-m) % bm, (-k) % bk
     ap = jnp.pad(a, ((0, pm), (0, pk))) if (pm or pk) else a

@@ -1,17 +1,22 @@
 """Public maxpool op with output-grid padding."""
 from __future__ import annotations
 
+from typing import Optional
+
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import resolve_interpret
 from repro.kernels.maxpool import maxpool as _kernel
 from repro.kernels.maxpool import ref as _ref
 
 
 def maxpool(a: jax.Array, *, r: int, s: int, bm: int = 128, bn: int = 128,
-            use_kernel: bool = True, interpret: bool = True) -> jax.Array:
+            use_kernel: bool = True,
+            interpret: Optional[bool] = None) -> jax.Array:
     if not use_kernel:
         return _ref.maxpool(a, r=r, s=s)
+    interpret = resolve_interpret(interpret)
     m, n = a.shape
     om, on = (m - r) // s + 1, (n - r) // s + 1
     pm, pn = (-om) % bm, (-on) % bn

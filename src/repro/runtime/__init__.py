@@ -1,0 +1,18 @@
+"""repro.runtime — predictor-driven kernel dispatch with a persistent
+tuning cache and online refinement.
+
+The paper trains lightweight NN+C predictors offline; this package puts
+them *inside* the dispatch path: a unified variant registry
+(``registry``), a hardware fingerprint keying the model zoo
+(``fingerprint``), a persistent per-(kernel, hardware) tuning cache
+(``cache``), predict-best dispatch with measured cold-start
+(``dispatch``), and online refit from actual wall times (``online``).
+"""
+from repro.runtime.cache import (CacheEntry, TuningCache, shape_bucket,
+                                 TRAIN_BUDGET_ROWS)
+from repro.runtime.dispatch import (DispatchPolicy, Dispatcher, Selection,
+                                    default_dispatcher, dispatch)
+from repro.runtime.fingerprint import Fingerprint, current_fingerprint
+from repro.runtime.online import OnlineConfig, OnlineRefiner
+from repro.runtime.registry import (KernelRegistry, RegisteredKernel,
+                                    Variant, default_registry)

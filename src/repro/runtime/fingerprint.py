@@ -1,0 +1,83 @@
+"""Hardware fingerprint — the model-zoo key of the tuning cache.
+
+The paper's premise is that a predictor is only valid for the (kernel,
+hardware) pair it was trained on (§4.1: every platform gets its own
+<=75-weight model).  The runtime cache therefore namespaces everything it
+persists by a fingerprint of the *executing* hardware: backend, device
+kind, device/core counts, and which dtypes actually materialise.  A cache
+directory produced on one host is never silently reused on another — a
+mismatched fingerprint simply resolves to a different (empty) directory,
+which is the cold-cache path, not an error.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import re
+import warnings
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Fingerprint:
+    backend: str               # jax.default_backend(): cpu | gpu | tpu
+    device_kind: str           # e.g. "cpu", "NVIDIA H100", "TPU v4"
+    device_count: int
+    host_cores: int
+    dtypes: tuple              # supported compute dtypes, sorted
+
+    def to_json(self) -> dict:
+        return {"backend": self.backend, "device_kind": self.device_kind,
+                "device_count": self.device_count,
+                "host_cores": self.host_cores,
+                "dtypes": list(self.dtypes)}
+
+    @classmethod
+    def from_json(cls, d: dict) -> "Fingerprint":
+        return cls(backend=d["backend"], device_kind=d["device_kind"],
+                   device_count=int(d["device_count"]),
+                   host_cores=int(d["host_cores"]),
+                   dtypes=tuple(d["dtypes"]))
+
+    @property
+    def key(self) -> str:
+        """Stable directory slug: human-readable prefix + content hash.
+
+        The hash covers every field, so any change (driver exposes a new
+        dtype, different device count) keys a fresh cache directory."""
+        canon = json.dumps(self.to_json(), sort_keys=True)
+        digest = hashlib.sha1(canon.encode()).hexdigest()[:10]
+        slug = re.sub(r"[^a-z0-9]+", "-",
+                      f"{self.backend}-{self.device_kind}".lower()).strip("-")
+        return f"{slug}-{self.device_count}x-{digest}"
+
+
+def _dtype_support() -> tuple:
+    """Dtypes that actually materialise (x64 depends on jax config)."""
+    out = []
+    for name in ("bfloat16", "float16", "float32", "float64"):
+        try:
+            with warnings.catch_warnings():
+                # jax warns (and truncates) when x64 is disabled — the
+                # truncation itself is the signal we are probing for
+                warnings.simplefilter("ignore")
+                if str(jnp.zeros((), jnp.dtype(name)).dtype) == name:
+                    out.append(name)
+        except (TypeError, ValueError):
+            pass
+    return tuple(out)
+
+
+def current_fingerprint() -> Fingerprint:
+    dev = jax.devices()[0]
+    return Fingerprint(
+        backend=jax.default_backend(),
+        device_kind=getattr(dev, "device_kind", "unknown"),
+        device_count=jax.device_count(),
+        host_cores=os.cpu_count() or 1,
+        dtypes=_dtype_support(),
+    )

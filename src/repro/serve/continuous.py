@@ -10,7 +10,11 @@ keeps the decode batch full.
 
 Admission order can be cost-aware: with a fitted NN+C step-time model the
 queue is served shortest-predicted-job-first (the paper's runtime mapping
-decision, §1).
+decision, §1).  The step-time predictor comes from the runtime tuning
+cache (``cost_model_from_cache``): serving records request wall times
+under the ``decode_step`` pseudo-kernel and every engine on the same
+hardware fingerprint shares the fitted model through the cache, instead
+of each fitting an ad-hoc model.
 
 Restriction: attention-family archs (KV-cache state only).  Recurrent
 states (SSM/xLSTM) would need per-slot state resets on admission — noted in
@@ -27,6 +31,57 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.registry import Model
+from repro.runtime.cache import shape_bucket
+
+# --------------------------------------------------------------------------
+# Runtime-cache-backed step-time predictor.  ``decode_step`` is a
+# prediction-only pseudo-kernel in the tuning cache: its rows are whole
+# request wall times, its c is the attention-dominated op count over the
+# generated region, and its fitted NN+C model orders the admission queue.
+# --------------------------------------------------------------------------
+
+DECODE_STEP_KERNEL = "decode_step"
+DECODE_STEP_FEATURES = ("prompt", "new")
+
+
+def decode_step_features(prompt_len: int, max_new: int) -> list:
+    """[prompt, new, c] — c counts attention work over the request's cache
+    region: each of the (prompt+new) consumed steps attends to an O(length)
+    prefix, so total ops grow ~ (prompt+new)^2."""
+    total = float(prompt_len + max_new)
+    return [float(prompt_len), float(max_new), total * total]
+
+
+def record_request_time(cache, prompt_len: int, max_new: int,
+                        seconds: float) -> None:
+    """Append one measured request to the cache's decode_step entry."""
+    entry = cache.entry(DECODE_STEP_KERNEL,
+                        feature_names=list(DECODE_STEP_FEATURES),
+                        variant_names=["engine"])
+    row = np.asarray([decode_step_features(prompt_len, max_new)])
+    entry.add_rows(row, [seconds],
+                   shape_bucket({"prompt": prompt_len, "new": max_new}))
+
+
+def cost_model_from_cache(cache, kernel: str = DECODE_STEP_KERNEL):
+    """Build the admission cost model from a runtime ``TuningCache``.
+
+    Returns ``cost(prompt_len, max_new) -> predicted seconds`` backed by the
+    cache's fitted NN+C state; raises ``ValueError`` when the cache is cold
+    (callers fall back to FIFO admission by passing ``cost_model=None``).
+    """
+    entry = cache.entry(kernel, feature_names=list(DECODE_STEP_FEATURES),
+                        variant_names=["engine"])
+    if entry.model is None:
+        raise ValueError(
+            f"tuning cache has no fitted {kernel!r} model yet — record "
+            "request times (record_request_time) and fit the entry first")
+
+    def cost(prompt_len: int, max_new: int) -> float:
+        row = np.asarray([decode_step_features(prompt_len, max_new)])
+        return float(entry.predict(row)[0])
+
+    return cost
 
 
 @dataclasses.dataclass

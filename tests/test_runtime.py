@@ -1,0 +1,287 @@
+"""repro.runtime: cache round-trip, fingerprint, dispatch, online refit."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core.features import feature_names, feature_vector
+from repro.core.nnc import LinearModel, MLPModel, load_model, save_model
+from repro.core.scheduler import KernelTask, predictor_from_runtime, schedule
+from repro.kernels import default_interpret
+from repro.kernels.blur import ref as blur_ref
+from repro.perfdata.simulate import DEVICES, VARIANTS, simulate_time
+from repro.runtime import (Dispatcher, DispatchPolicy, Fingerprint,
+                           OnlineConfig, OnlineRefiner, TuningCache,
+                           current_fingerprint, default_registry,
+                           shape_bucket)
+from repro.serve.continuous import (cost_model_from_cache,
+                                    record_request_time)
+
+
+def _fit_xy(n=80, seed=0):
+    """Tiny synthetic perf dataset: t ~ c/1e9, features [m, n, c]."""
+    rng = np.random.RandomState(seed)
+    m = rng.randint(16, 1024, n).astype(float)
+    k = rng.randint(16, 1024, n).astype(float)
+    c = m * k
+    X = np.column_stack([m, k, c])
+    y = c / 1e9 * rng.uniform(0.9, 1.1, n)
+    return X, y
+
+
+# --------------------------------------------------------------------------
+# satellite: NN+C state round-trips to npz/JSON
+# --------------------------------------------------------------------------
+
+def test_model_save_load_identical_predictions(tmp_path):
+    X, y = _fit_xy()
+    model = MLPModel([3, 8, 1], epochs=1500)
+    model.fit(X, y)
+    save_model(model, str(tmp_path / "m"))
+    loaded = load_model(str(tmp_path / "m"))
+    assert np.array_equal(loaded.predict(X), model.predict(X))
+    assert np.array_equal(loaded.predict_np(X), model.predict_np(X))
+
+    lin = LinearModel()
+    lin.fit(X, y)
+    save_model(lin, str(tmp_path / "l"))
+    assert np.array_equal(load_model(str(tmp_path / "l")).predict(X),
+                          lin.predict(X))
+
+
+def test_unfitted_model_refuses_to_persist(tmp_path):
+    with pytest.raises(ValueError):
+        save_model(MLPModel([3, 8, 1]), str(tmp_path / "m"))
+
+
+# --------------------------------------------------------------------------
+# fingerprint
+# --------------------------------------------------------------------------
+
+def test_fingerprint_stable_on_same_host():
+    fp1, fp2 = current_fingerprint(), current_fingerprint()
+    assert fp1 == fp2
+    assert fp1.key == fp2.key
+    assert Fingerprint.from_json(fp1.to_json()) == fp1
+
+
+def test_fingerprint_key_distinguishes_hardware():
+    a = Fingerprint("cpu", "cpu", 1, 8, ("float32",))
+    b = Fingerprint("cpu", "cpu", 2, 8, ("float32",))   # more devices
+    c = Fingerprint("gpu", "NVIDIA H100", 1, 8, ("float32", "bfloat16"))
+    assert len({a.key, b.key, c.key}) == 3
+
+
+# --------------------------------------------------------------------------
+# tuning cache
+# --------------------------------------------------------------------------
+
+def _filled_cache(tmp_path, epochs=1200):
+    cache = TuningCache(root=str(tmp_path / "tc"))
+    entry = cache.entry("synth", feature_names=["m", "k"],
+                        variant_names=["only"])
+    X, y = _fit_xy()
+    for i in range(len(y)):
+        entry.add_rows(X[i][None], [y[i]],
+                       shape_bucket({"m": X[i, 0], "k": X[i, 1]}))
+    entry.fit(epochs=epochs)
+    cache.save()
+    return cache, entry, X
+
+
+def test_cache_roundtrip_identical_predictions(tmp_path):
+    cache, entry, X = _filled_cache(tmp_path)
+    reloaded = TuningCache(root=str(tmp_path / "tc"))
+    entry2 = reloaded.entry("synth")
+    assert np.array_equal(entry2.predict(X), entry.predict(X))
+    assert entry2.buckets == entry.buckets
+    assert entry2.n_rows == entry.n_rows
+    assert entry2.feature_names == entry.feature_names
+
+
+def test_cache_discards_stale_layout(tmp_path):
+    _filled_cache(tmp_path)
+    reloaded = TuningCache(root=str(tmp_path / "tc"))
+    # variant axis changed since the rows were measured: entry is discarded
+    entry = reloaded.entry("synth", feature_names=["m", "k"],
+                           variant_names=["only", "new_variant"])
+    assert entry.n_rows == 0 and entry.model is None
+
+
+def test_cache_corrupt_entry_discarded_not_fatal(tmp_path):
+    _filled_cache(tmp_path)
+    fp_dir = next(p for p in (tmp_path / "tc").iterdir() if p.is_dir())
+    npz = fp_dir / "synth.npz"
+    npz.write_bytes(npz.read_bytes()[:100])      # crash-torn npz
+    reloaded = TuningCache(root=str(tmp_path / "tc"))
+    entry = reloaded.entry("synth", feature_names=["m", "k"],
+                           variant_names=["only"])
+    assert entry.n_rows == 0 and entry.model is None   # cold, no crash
+
+
+def test_cache_cold_miss_raises_without_layout(tmp_path):
+    cache = TuningCache(root=str(tmp_path / "tc"))
+    with pytest.raises(KeyError):
+        cache.entry("never_seen")
+
+
+# --------------------------------------------------------------------------
+# dispatch: cold cache measures, warm cache predicts
+# --------------------------------------------------------------------------
+
+def _blur_dispatcher(tmp_path):
+    return Dispatcher(
+        registry=default_registry(include=["blur"]),
+        cache=TuningCache(root=str(tmp_path / "tc")),
+        policy=DispatchPolicy(min_rows_to_fit=15, fit_epochs=800,
+                              min_window=1e-3))
+
+
+def test_dispatch_cold_falls_back_to_measurement(tmp_path):
+    d = _blur_dispatcher(tmp_path)
+    rng = np.random.RandomState(0)
+    for (m, n) in [(96, 96), (128, 96), (128, 128)]:
+        a = jnp.asarray(rng.rand(m, n), jnp.float32)
+        out = d.dispatch("blur", a)
+        assert d.selections[-1].mode == "measured"
+        np.testing.assert_allclose(np.asarray(out),
+                                   np.asarray(blur_ref.blur(a)),
+                                   rtol=1e-4, atol=1e-4)
+    # 3 shapes x 5 variants = 15 rows -> model fitted -> warm from here on
+    assert d.n_measured == 3
+    a = jnp.asarray(rng.rand(128, 128), jnp.float32)
+    d.dispatch("blur", a)
+    assert d.selections[-1].mode == "predicted"
+    assert d.n_measured == 3                  # no new measurement
+    assert d.selections[-1].predicted_s is not None
+
+
+def test_dispatch_reload_makes_identical_selections(tmp_path):
+    d = _blur_dispatcher(tmp_path)
+    rng = np.random.RandomState(0)
+    arrays = [jnp.asarray(rng.rand(m, n), jnp.float32)
+              for (m, n) in [(96, 96), (128, 96), (128, 128)]]
+    for a in arrays:
+        d.dispatch("blur", a)
+
+    def selections(disp):
+        out = []
+        for a in arrays:
+            disp.dispatch("blur", a)
+            out.append(disp.selections[-1].chosen)
+        return out
+
+    first = selections(d)
+    d2 = _blur_dispatcher(tmp_path)           # fresh process stand-in
+    second = selections(d2)
+    assert second == first
+    assert d2.n_measured == 0                 # warm purely from disk
+
+
+# --------------------------------------------------------------------------
+# online refinement on a drifting workload (simulated devices)
+# --------------------------------------------------------------------------
+
+def test_online_refit_lowers_rolling_mape(tmp_path):
+    kernel, dev, var = "mv", DEVICES["i5"], VARIANTS["cpu"]["eigen"]
+    names = feature_names(kernel, cpu=True)[:-1]     # entry names exclude c
+    rng = np.random.RandomState(0)
+
+    def sample_row(drift):
+        from repro.core.features import KERNELS
+        p = KERNELS[kernel].sample(rng)
+        nthd = int(rng.randint(1, 5))
+        row = feature_vector(kernel, p, n_threads=nthd)
+        t = simulate_time(kernel, dev, var, p, nthd, rng) * drift
+        return row, t, shape_bucket(p)
+
+    cache = TuningCache(root=str(tmp_path / "tc"))
+    entry = cache.entry(kernel, feature_names=list(names),
+                        variant_names=["eigen"])
+    for _ in range(60):                               # pre-drift training set
+        row, t, bucket = sample_row(drift=1.0)
+        entry.add_rows(row[None], [t], bucket)
+    entry.fit(epochs=1500)
+
+    refiner = OnlineRefiner(cache, OnlineConfig(
+        refit_every=25, window=25, budget_rows=50, refit_epochs=1200))
+    # the device got 8x slower (thermal throttle / contention drift)
+    mape_start = None
+    for i in range(75):
+        row, t, bucket = sample_row(drift=8.0)
+        pred = float(entry.predict(row[None])[0])
+        refiner.observe(kernel, row, bucket, t, predicted_s=pred)
+        if i == 24:
+            mape_start = refiner.rolling_mape(kernel)
+    mape_end = refiner.rolling_mape(kernel)
+    assert refiner.refits[kernel] >= 2
+    assert mape_start > 50.0                          # badly wrong pre-refit
+    assert mape_end < 0.5 * mape_start, (mape_start, mape_end)
+
+
+# --------------------------------------------------------------------------
+# consumers: serve admission + kernel-DAG scheduler
+# --------------------------------------------------------------------------
+
+def test_cost_model_from_cache_orders_requests(tmp_path):
+    cache = TuningCache(root=str(tmp_path / "tc"))
+    rng = np.random.RandomState(0)
+    for _ in range(60):
+        plen, mnew = int(rng.randint(1, 64)), int(rng.randint(1, 32))
+        t = 1e-3 * (plen + mnew) * rng.uniform(0.95, 1.05)
+        record_request_time(cache, plen, mnew, t)
+    with pytest.raises(ValueError):
+        cost_model_from_cache(cache)                 # not fitted yet
+    cache.entry("decode_step").fit(model=LinearModel())
+    cache.save()
+
+    cost = cost_model_from_cache(TuningCache(root=str(tmp_path / "tc")))
+    assert cost(2, 3) < cost(10, 3) < cost(40, 20)
+
+
+def test_scheduler_predictor_from_runtime(tmp_path):
+    """Paper §1 via the runtime path: per-device caches feed the DAG
+    scheduler absolute times; the big matmul must get the fast device."""
+    reg = default_registry(include=["matmul"])
+    dispatchers = {}
+    for name, speed in (("cpu", 1e9), ("gpu", 1e11)):
+        fp = Fingerprint("sim", name, 1, 1, ("float32",))
+        cache = TuningCache(root=str(tmp_path / "tc"), fingerprint=fp)
+        disp = Dispatcher(registry=reg, cache=cache)
+        rng = np.random.RandomState(0)
+        entry = disp._entry("matmul")
+        for _ in range(40):
+            p = {"m": int(rng.randint(16, 2048)),
+                 "n": int(rng.randint(16, 2048)),
+                 "k": int(rng.randint(16, 2048))}
+            rows = reg.feature_rows("matmul", p)
+            times = rows[:, -1] / speed
+            entry.add_rows(rows, times, shape_bucket(p))
+        entry.fit(model=LinearModel())
+        dispatchers[name] = disp
+
+    predict = predictor_from_runtime(dispatchers)
+    small = KernelTask("small", "matmul", {"m": 64, "n": 64, "k": 64})
+    big = KernelTask("big", "matmul", {"m": 1024, "n": 1024, "k": 1024})
+    # sanity: predictions are absolute seconds in the right regime
+    assert predict(big, "gpu") < predict(big, "cpu")
+    assign = schedule([small, big], predict, ["cpu", "gpu"])
+    assert assign["big"].device == "gpu"
+    assert assign["small"].device == "cpu"
+
+
+# --------------------------------------------------------------------------
+# satellites: interpret default + tuner seed threading
+# --------------------------------------------------------------------------
+
+def test_default_interpret_follows_backend():
+    assert default_interpret("cpu") is True
+    assert default_interpret("tpu") is False
+    assert default_interpret("gpu") is False
+    # on this container the active backend is cpu -> interpret by default
+    assert default_interpret() is True
+
+
+def test_tuner_measure_schedule_accepts_seed():
+    from repro.autotune.tuner import measure_schedule
+    t = measure_schedule(1, 1, 64, 8, 32, 32, reps=1, seed=123)
+    assert t > 0.0

@@ -1,56 +1,68 @@
-"""The paper's §1 motivating example, end to end.
+"""The paper's §1 motivating example, end to end, through ``repro.api``.
 
-Train NN+C predictors for matmul on a CPU-class and a GPU-class device,
-then schedule a DAG with one small and one big matmul: the small one must
-take the CPU so the GPU is free for the big one — a decision only absolute
-time predictions enable.
+Two independent matmuls, a CPU-class and a GPU-class device: the small one
+must take the CPU so the GPU is free for the big one — a decision only
+*absolute time* predictions enable.  Where the pre-API version hand-built
+``KernelTask`` DAGs and hand-wrote the predict callable, the user-facing
+code is now just trace -> compile: the tracer derives params from avals,
+``predictor_from_runtime`` pulls absolute times out of each device's
+tuning cache, and the earliest-finish-time scheduler does the rest.
 
     PYTHONPATH=src python examples/schedule_dag.py
 """
+import numpy as np
 
-from repro.core.features import feature_vector
-from repro.core.nnc import make_model, slice_features
-from repro.core.scheduler import KernelTask, makespan, schedule
-from repro.perfdata.datasets import Combo, generate, train_test_split
+from repro.api import ops, trace
+from repro.core.scheduler import KernelTask
+from repro.runtime import default_registry
+from repro.runtime.simdev import fake_matmul_device
 
-DEVICES = {"cpu": Combo("mm", "eigen", "xeon", True),
-           "gpu": Combo("mm", "cuda_shared", "tesla", True)}
-
-
-def train_predictors():
-    models = {}
-    for dev, combo in DEVICES.items():
-        X, y, _ = generate(combo, n=500, seed=0)
-        (trX, trY), _ = train_test_split(X, y)
-        model, uses_c = make_model("nnc", X.shape[1],
-                                   mm_cpu=(dev == "cpu"), epochs=15000)
-        model.fit(slice_features(trX, uses_c), trY)
-        models[dev] = (model, uses_c, combo.is_cpu)
-    return models
+ROOT = "results/fake_devices"
 
 
 def main():
-    models = train_predictors()
+    reg = default_registry(include=["matmul"])
+    devices = {"cpu": fake_matmul_device(ROOT, "cpu-xeon", 1e9, reg),
+               "gpu": fake_matmul_device(ROOT, "gpu-tesla", 1e11, reg)}
 
-    def predict(task: KernelTask, device: str) -> float:
-        model, uses_c, is_cpu = models[device]
-        x = feature_vector("mm", task.params,
-                           n_threads=32 if is_cpu else None)
-        return float(model.predict(slice_features(x[None], uses_c))[0])
+    rng = np.random.RandomState(0)
+    small_a = rng.rand(100, 100).astype(np.float32)
+    small_b = rng.rand(100, 100).astype(np.float32)
+    big_a = rng.rand(1024, 1024).astype(np.float32)
+    big_b = rng.rand(1024, 1024).astype(np.float32)
 
-    small = KernelTask("small_mm", "mm",
-                       {"m": 100, "n": 100, "k": 100, "d1": 1.0, "d2": 1.0})
-    big = KernelTask("big_mm", "mm",
-                     {"m": 1024, "n": 1024, "k": 1024, "d1": 1.0, "d2": 1.0})
-    assignments = schedule([small, big], predict, list(DEVICES))
-    for name, a in assignments.items():
-        print(f"{name:10s} -> {a.device}  "
-              f"[{a.start*1e3:8.3f}ms, {a.finish*1e3:8.3f}ms]")
-    print(f"makespan: {makespan(assignments)*1e3:.3f}ms")
+    with trace(registry=reg) as tb:
+        small = ops.matmul(small_a, small_b)
+        big = ops.matmul(big_a, big_b)
+    compiled = tb.compile(devices=devices)
+
+    for row in compiled.gantt():
+        print(f"{row['task']:10s} -> {row['device']}  "
+              f"[{row['start_s']*1e3:8.3f}ms, {row['finish_s']*1e3:8.3f}ms]")
+    print(f"makespan: {compiled.makespan*1e3:.3f}ms")
+
+    # per-kernel winners alone would send BOTH matmuls to the GPU
+    t = {(n, d): disp.predict_time("matmul",
+                                   reg.params_of("matmul", a, b))
+         for n, (a, b) in [("small", (small_a, small_b)),
+                           ("big", (big_a, big_b))]
+         for d, disp in devices.items()}
     print(f"(per-kernel, the small matmul is also faster on the GPU: "
-          f"{predict(small,'gpu')*1e3:.3f}ms vs cpu {predict(small,'cpu')*1e3:.3f}ms"
-          f" — but the schedule keeps the GPU free for the big one)")
-    assert assignments["big_mm"].device == "gpu"
+          f"{t[('small', 'gpu')]*1e3:.3f}ms vs cpu "
+          f"{t[('small', 'cpu')]*1e3:.3f}ms — but the schedule keeps the "
+          f"GPU free for the big one)")
+
+    out_small, out_big = compiled()
+    ref = small_a @ small_b
+    assert float(np.max(np.abs(np.asarray(out_small) - ref))) < 1e-2
+    assert compiled.device_of(small.name) == "cpu"
+    assert compiled.device_of(big.name) == "gpu"
+
+    # the traced program lowers to exactly the tasks the old hand-rolled
+    # version built by hand
+    tasks = tb.program.to_kernel_tasks()
+    assert tasks[0] == KernelTask(small.name, "matmul",
+                                  {"m": 100, "n": 100, "k": 100})
 
 
 if __name__ == "__main__":

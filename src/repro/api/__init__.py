@@ -1,0 +1,26 @@
+"""repro.api — the lazy op-graph front-end: one user-facing surface over
+variant selection (PR 2 dispatch), predictor-driven device placement
+(core.scheduler), and portable workload export.
+
+The whole productivity pitch in five lines::
+
+    from repro.api import ops, trace
+    with trace() as tb:
+        y = ops.blur(ops.matmul(a, b))     # records a DAG, executes nothing
+    compiled = tb.compile()                # schedule from predicted times
+    out = compiled()                       # predicted-best variant per node
+
+The same ``ops.matmul(a, b)`` call *outside* a trace executes eagerly
+through the runtime dispatcher, so scripts and graph building share one
+API.  ``Program`` round-trips to JSON (``save``/``load``) and re-compiles
+under a different hardware fingerprint — the portability leg.
+"""
+from repro.api import ops
+from repro.api.compile_ import CompiledProgram, compile_program
+from repro.api.export import (SCHEMA_VERSION, gantt_csv, load_program,
+                              program_from_json, program_to_json,
+                              save_gantt_csv, save_program)
+from repro.api.ops import (KERNEL_OPS, LazyRef, TraceBuilder,
+                           current_dispatcher, trace, tracing,
+                           use_dispatcher)
+from repro.api.program import InputSpec, Node, Program

@@ -1,0 +1,129 @@
+"""``Program.compile``: DAG -> heterogeneous schedule -> executable.
+
+``compile_program`` fans the program's kernel tasks through the
+``core.scheduler`` earliest-finish-time scheduler, with absolute times
+coming from ``predictor_from_runtime`` over per-device runtime dispatchers
+(each carrying its own fingerprinted tuning cache).  The result is a
+``CompiledProgram``: calling it executes every node on its assigned device
+with the predicted-best variant — per-shape decisions are memoized inside
+each dispatcher, so steady-state re-execution is dict hits, not model
+forwards.  A cold cache raises (``predictor_from_runtime``'s contract): a
+schedule built from unfitted predictions would be silent garbage.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.api.program import Program
+from repro.core.scheduler import (Assignment, execution_order, makespan,
+                                  predictor_from_runtime, schedule)
+
+
+def _resolve_devices(devices, policy) -> dict:
+    from repro.api.ops import current_dispatcher, pinned_dispatcher
+    from repro.runtime.dispatch import Dispatcher, default_dispatcher
+    if devices is None:
+        if policy is not None:
+            if pinned_dispatcher() is not None:
+                raise ValueError(
+                    "policy= conflicts with an active use_dispatcher() "
+                    "pin — the pinned dispatcher already carries its "
+                    "policy")
+            return {"local": default_dispatcher(policy)}
+        return {"local": current_dispatcher()}
+    if isinstance(devices, Dispatcher):
+        return {"local": devices}
+    if isinstance(devices, dict):
+        bad = [n for n, d in devices.items()
+               if not hasattr(d, "predict_time")]
+        if bad:
+            raise TypeError(
+                f"devices {bad} are not dispatcher-like (need "
+                "predict_time/dispatch); each device name must map to a "
+                "runtime Dispatcher whose cache carries that device's "
+                "fingerprint")
+        return dict(devices)
+    raise TypeError(
+        "devices must be None (the active dispatcher), a Dispatcher, or a "
+        "{name: Dispatcher} map — bare device-name lists are ambiguous "
+        "because a dispatcher's tuning cache IS the device identity")
+
+
+def compile_program(program: Program, devices=None, policy=None,
+                    bindings=None) -> "CompiledProgram":
+    dispatchers = _resolve_devices(devices, policy)
+    for disp in dispatchers.values():
+        program.check(disp.registry)
+    tasks = program.to_kernel_tasks()
+    predict = predictor_from_runtime(dispatchers)
+    assignments = schedule(tasks, predict, list(dispatchers))
+    return CompiledProgram(program=program, dispatchers=dispatchers,
+                           assignments=assignments,
+                           bindings=dict(bindings or {}),
+                           order=execution_order(tasks, assignments))
+
+
+@dataclasses.dataclass
+class CompiledProgram:
+    program: Program
+    dispatchers: dict                 # device name -> runtime Dispatcher
+    assignments: dict                 # node name -> Assignment
+    bindings: dict                    # input name -> default concrete array
+    order: list                       # KernelTasks, frozen execution order
+                                      # (dependency-checked at compile time)
+
+    @property
+    def makespan(self) -> float:
+        """Predicted end-to-end seconds of the scheduled DAG."""
+        return makespan(self.assignments)
+
+    def device_of(self, node_name: str) -> str:
+        return self.assignments[node_name].device
+
+    def gantt(self) -> list[dict]:
+        """Schedule rows (sorted by predicted start) for reports/CSV."""
+        rows = []
+        for node in self.program.nodes:
+            a: Assignment = self.assignments[node.name]
+            rows.append({"task": node.name, "kernel": node.kernel,
+                         "device": a.device, "start_s": a.start,
+                         "finish_s": a.finish})
+        return sorted(rows, key=lambda r: (r["start_s"], r["task"]))
+
+    def __call__(self, *args, **named):
+        """Execute the schedule.  Inputs bind positionally (program input
+        order), by name, or fall back to the bindings captured at trace
+        time; shapes must match the compiled specs (params — and therefore
+        the schedule — were derived from them)."""
+        env = dict(self.bindings)
+        specs = self.program.inputs
+        if len(args) > len(specs):
+            raise TypeError(f"program takes {len(specs)} inputs, got "
+                            f"{len(args)}")
+        for spec, arr in zip(specs, args):
+            env[spec.name] = arr
+        unknown = set(named) - {s.name for s in specs}
+        if unknown:
+            raise TypeError(f"unknown inputs {sorted(unknown)}")
+        env.update(named)
+        missing = [s.name for s in specs if s.name not in env]
+        if missing:
+            raise TypeError(f"unbound inputs {missing}")
+        for spec in specs:
+            got = tuple(np.shape(env[spec.name]))
+            if got != tuple(spec.shape):
+                raise ValueError(
+                    f"input {spec.name!r}: shape {got} != compiled spec "
+                    f"{tuple(spec.shape)} (re-trace and re-compile for new "
+                    "shapes)")
+
+        node_by = {n.name: n for n in self.program.nodes}
+        for task in self.order:
+            node = node_by[task.name]
+            env[task.name] = self.dispatchers[
+                self.assignments[task.name].device].dispatch(
+                node.kernel, *(env[d] for d in node.deps), **node.kwargs)
+        outs = tuple(env[o] for o in self.program.outputs)
+        return outs[0] if len(outs) == 1 else outs

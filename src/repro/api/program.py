@@ -1,0 +1,168 @@
+"""The typed lazy op-graph IR behind ``repro.api``.
+
+A ``Program`` is a validated kernel DAG: ``InputSpec`` placeholders (shape
+and dtype only — no data, so a program is portable across hosts), ``Node``s
+in topological order, and named outputs.  Every node carries the kernel
+name, the predictor params derived from its input avals at trace time (the
+NN+C feature source), the static keyword operands (e.g. maxpool's r/s),
+and its inferred output aval.  Data dependencies are value names — program
+inputs or earlier nodes — in positional order, inferred from value flow by
+the tracer in ``repro.api.ops``.
+
+Construction validates structure (unique names, defined deps, known
+outputs), which also makes node order a topological order by fiat.
+``check(registry)`` goes further and re-derives every node's params and
+output aval through the registry's uniform ``abstract_params``/``out_aval``
+hooks — the defence against hand-edited JSON or an IR built against a
+different registry.  ``to_kernel_tasks()`` lowers the DAG to the
+``core.scheduler`` task form.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.scheduler import KernelTask
+from repro.kernels import Aval
+
+
+def norm_dtype(dtype) -> str:
+    """Canonical string form ('float32', 'int8', ...) of any dtype-like."""
+    return str(np.dtype(dtype))
+
+
+@dataclasses.dataclass(frozen=True)
+class InputSpec:
+    name: str
+    shape: tuple
+    dtype: str
+
+    @property
+    def aval(self) -> Aval:
+        return Aval(tuple(self.shape), self.dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class Node:
+    """One lazy kernel application."""
+    name: str
+    kernel: str
+    deps: tuple            # value names (inputs / earlier nodes), positional
+    params: dict           # predictor params derived from input avals
+    kwargs: dict           # static keyword operands forwarded at execution
+    out_shape: tuple
+    out_dtype: str
+
+    @property
+    def aval(self) -> Aval:
+        return Aval(tuple(self.out_shape), self.out_dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class Program:
+    inputs: tuple
+    nodes: tuple
+    outputs: tuple
+
+    def __post_init__(self):
+        self.validate()
+
+    # -- validation ----------------------------------------------------------
+    def validate(self) -> "Program":
+        """Structural checks; raises ValueError on a malformed DAG."""
+        names: set = set()
+        for spec in self.inputs:
+            if spec.name in names:
+                raise ValueError(f"duplicate value name {spec.name!r}")
+            names.add(spec.name)
+        for node in self.nodes:
+            if node.name in names:
+                raise ValueError(f"duplicate value name {node.name!r}")
+            for d in node.deps:
+                if d not in names:
+                    raise ValueError(
+                        f"node {node.name!r} depends on undefined value "
+                        f"{d!r} (deps must precede, so node order is "
+                        "topological)")
+            names.add(node.name)
+        if not self.outputs:
+            raise ValueError("program has no outputs")
+        for o in self.outputs:
+            if o not in names:
+                raise ValueError(f"unknown output {o!r}")
+        return self
+
+    def check(self, registry) -> "Program":
+        """Re-derive every node's params and output aval through the
+        registry's abstract hooks; a mismatch means the IR was hand-edited
+        or built against a different registry."""
+        avals = {s.name: s.aval for s in self.inputs}
+        for node in self.nodes:
+            args = [avals[d] for d in node.deps]
+            params = registry.abstract_params(node.kernel, *args,
+                                              **node.kwargs)
+            if dict(params) != dict(node.params):
+                raise ValueError(
+                    f"node {node.name!r}: stored params {node.params} != "
+                    f"derived {params}")
+            out = registry.out_aval(node.kernel, *args, **node.kwargs)
+            if tuple(out.shape) != tuple(node.out_shape) or \
+                    norm_dtype(out.dtype) != node.out_dtype:
+                raise ValueError(
+                    f"node {node.name!r}: stored aval "
+                    f"{node.out_shape}/{node.out_dtype} != derived "
+                    f"{tuple(out.shape)}/{norm_dtype(out.dtype)}")
+            avals[node.name] = node.aval
+        return self
+
+    # -- introspection -------------------------------------------------------
+    def node(self, name: str) -> Node:
+        for n in self.nodes:
+            if n.name == name:
+                return n
+        raise KeyError(f"no node named {name!r}")
+
+    def input_names(self) -> list[str]:
+        return [s.name for s in self.inputs]
+
+    def aval_of(self, name: str) -> Aval:
+        for s in self.inputs:
+            if s.name == name:
+                return s.aval
+        return self.node(name).aval
+
+    # -- lowering ------------------------------------------------------------
+    def to_kernel_tasks(self) -> list[KernelTask]:
+        """Lower to the ``core.scheduler`` form: one task per node, deps
+        filtered to node names (program inputs are materialised values, not
+        schedulable work)."""
+        node_names = {n.name for n in self.nodes}
+        return [KernelTask(n.name, n.kernel, dict(n.params),
+                           tuple(d for d in n.deps if d in node_names))
+                for n in self.nodes]
+
+    # -- conveniences (lazy imports avoid package cycles) --------------------
+    def compile(self, devices=None, policy=None, bindings=None):
+        """Schedule + specialise this program; see ``repro.api.compile_``."""
+        from repro.api.compile_ import compile_program
+        return compile_program(self, devices=devices, policy=policy,
+                               bindings=bindings)
+
+    def to_json(self) -> dict:
+        from repro.api.export import program_to_json
+        return program_to_json(self)
+
+    @staticmethod
+    def from_json(doc: dict, registry=None) -> "Program":
+        from repro.api.export import program_from_json
+        return program_from_json(doc, registry=registry)
+
+    def save(self, path: str) -> None:
+        from repro.api.export import save_program
+        save_program(self, path)
+
+    @staticmethod
+    def load(path: str, registry=None) -> "Program":
+        from repro.api.export import load_program
+        return load_program(path, registry=registry)

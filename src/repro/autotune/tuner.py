@@ -19,12 +19,11 @@ import numpy as np
 from repro.core.nnc import MLPModel, lightweight_dims
 from repro.core.selection import VariantSelector
 from repro.models.attention import attend_chunked
+# the registry owns the schedule axis (single source of truth); the tuner
+# sweeps the full grid, dispatch ranks the curated subset
+from repro.runtime.registry import ATTENTION_SCHEDULE_GRID, attention_flops
 
-SCHEDULES = [(q, k) for q in (64, 128, 256, 512) for k in (128, 256, 512, 1024)]
-
-
-def attention_flops(b: int, h: int, s: int, d: int) -> float:
-    return 4.0 * b * h * s * s * d      # qk^T + pv
+SCHEDULES = list(ATTENTION_SCHEDULE_GRID)
 
 
 def _features(b, h, s, d, qc, kc):

@@ -62,6 +62,44 @@ def makespan(assignments: dict[str, Assignment]) -> float:
     return max(a.finish for a in assignments.values())
 
 
+def execution_order(tasks: Sequence[KernelTask],
+                    assignments: dict[str, Assignment]) -> list[KernelTask]:
+    """Tasks in predicted-start-time order, verified dependency-safe.
+
+    An earliest-finish-time schedule always starts a task at or after every
+    dependency's finish, so start-time order is a topological order; this
+    re-checks the invariant (ties broken by submission order) so a
+    hand-edited or buggy assignment map fails loudly instead of executing a
+    node before its inputs exist.
+    """
+    pos = {t.name: i for i, t in enumerate(tasks)}
+    missing = [t.name for t in tasks if t.name not in assignments]
+    if missing:
+        raise KeyError(f"tasks without assignments: {missing}")
+    order = sorted(tasks, key=lambda t: (assignments[t.name].start,
+                                         pos[t.name]))
+    done: set = set()
+    for t in order:
+        if not all(d in done for d in t.deps):
+            raise ValueError(f"schedule violates dependencies at {t.name!r}")
+        done.add(t.name)
+    return order
+
+
+def run_schedule(tasks: Sequence[KernelTask],
+                 assignments: dict[str, Assignment],
+                 run: Callable[[KernelTask, str], object]) -> dict[str, object]:
+    """The generic Assignment -> execution bridge: call ``run(task,
+    device)`` for every task in dependency-respecting start order; returns
+    name -> result.  (``repro.api.CompiledProgram`` freezes
+    ``execution_order`` once at compile time instead, so repeated
+    executions skip the sort and dependency re-check.)"""
+    results: dict[str, object] = {}
+    for t in execution_order(tasks, assignments):
+        results[t.name] = run(t, assignments[t.name].device)
+    return results
+
+
 def predictor_from_runtime(dispatchers: dict[str, object]
                            ) -> Callable[[KernelTask, str], float]:
     """Build ``predict(task, device)`` from per-device runtime dispatchers.

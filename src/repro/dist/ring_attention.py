@@ -11,7 +11,12 @@ handled by padding the sequence and masking the pad keys.
 
 The first hop processes the device's own (diagonal) block, which every query
 can see under any supported mask — the running max is finite from step one,
-so fully-masked later blocks contribute exact zeros.
+so fully-masked later blocks contribute exact zeros.  Under a causal mask
+those zero-contribution blocks are *skipped* outright: at hop ``step`` the
+devices with ``idx < step`` hold a block that wrapped around the ring and
+sits entirely in their causal future, so the whole online-softmax update is
+guarded by a ``lax.cond`` (halving causal ring FLOPs) while the ppermute
+rotation — a collective — still runs on every device every hop.
 """
 from __future__ import annotations
 
@@ -22,6 +27,19 @@ from jax.sharding import PartitionSpec as P
 from repro.dist import compat
 from repro.dist.masking import NEG_INF, PAD_SENTINEL, mask_bias
 from repro.dist.sharding import _axis_sizes, active_mesh
+
+
+def _causal_skip_possible(step: int, n: int, s_loc: int,
+                          q_offset: int) -> bool:
+    """True when ring hop ``step`` presents a fully causally-masked k/v
+    block to the devices with ``idx < step``: their block wrapped around
+    the ring (src = idx - step + n), so its smallest key position
+    ``src * s_loc`` exceeds their largest query position
+    ``idx * s_loc + s_loc - 1 + q_offset`` — independent of idx, hence
+    static per hop; ``idx`` only decides *which* devices skip (a lax.cond
+    inside the SPMD body).  A window mask only removes further visibility,
+    so the causal criterion stays safe with ``window > 0``."""
+    return step > 0 and (n - step - 1) * s_loc >= q_offset
 
 
 def ring_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
@@ -75,17 +93,29 @@ def ring_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
             src = (idx - step) % n            # block index k_cur came from
             k_pos = src * s_loc + offs
             k_pos = jnp.where(k_pos < s, k_pos, PAD_SENTINEL + k_pos)
-            sc = jnp.einsum("bshd,bthd->bhst", q_loc, k_cur
-                            ).astype(jnp.float32) * scale
-            sc = sc + mask_bias(q_pos, k_pos, causal, window)[None, None]
-            m_new = jnp.maximum(m, sc.max(axis=-1))
-            alpha = jnp.exp(m - m_new)
-            p = jnp.exp(sc - m_new[..., None])
-            l = l * alpha + p.sum(axis=-1)
-            acc = acc * alpha[..., None] + jnp.einsum(
-                "bhst,bthd->bhsd", p.astype(q_loc.dtype), v_cur
-            ).astype(jnp.float32)
-            m = m_new
+
+            def fold(acc, m, l, _k=k_cur, _v=v_cur, _pos=k_pos):
+                sc = jnp.einsum("bshd,bthd->bhst", q_loc, _k
+                                ).astype(jnp.float32) * scale
+                sc = sc + mask_bias(q_pos, _pos, causal, window)[None, None]
+                m_new = jnp.maximum(m, sc.max(axis=-1))
+                alpha = jnp.exp(m - m_new)
+                p = jnp.exp(sc - m_new[..., None])
+                l_new = l * alpha + p.sum(axis=-1)
+                acc_new = acc * alpha[..., None] + jnp.einsum(
+                    "bhst,bthd->bhsd", p.astype(q_loc.dtype), _v
+                ).astype(jnp.float32)
+                return acc_new, m_new, l_new
+
+            if causal and _causal_skip_possible(step, n, s_loc, q_offset):
+                # fully-masked blocks contribute exact zeros — skip the
+                # whole update on the devices holding one; the rotation
+                # below still runs everywhere (ppermute is collective)
+                acc, m, l = jax.lax.cond(
+                    idx >= step, fold, lambda acc, m, l: (acc, m, l),
+                    acc, m, l)
+            else:
+                acc, m, l = fold(acc, m, l)
             if step != n - 1:
                 k_cur = jax.lax.ppermute(k_cur, axis_name, perm)
                 v_cur = jax.lax.ppermute(v_cur, axis_name, perm)

@@ -1,12 +1,21 @@
 # OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
-"""Shared kernel-dispatch policy helpers."""
+"""Shared kernel-dispatch policy helpers + the abstract-value contract."""
 from __future__ import annotations
 
-from typing import Optional
+from typing import NamedTuple, Optional
 
 import jax
+
+
+class Aval(NamedTuple):
+    """Shape/dtype abstract value for the ``abstract_params``/``out_aval``
+    hooks every ``ops.py`` entry point exposes.  The hooks only ever read
+    ``.shape`` and ``.dtype``, so concrete jax/numpy arrays, lazy traced
+    values, and these Avals are all interchangeable inputs."""
+    shape: tuple
+    dtype: object
 
 # backends whose Pallas lowering is compiled, not interpreted
 _COMPILED_BACKENDS = ("gpu", "cuda", "rocm", "tpu")

@@ -14,9 +14,19 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels import resolve_interpret
+from repro.kernels import Aval, resolve_interpret
 from repro.kernels.blur import blur as _kernel
 from repro.kernels.blur import ref as _ref
+
+
+def abstract_params(a) -> dict:
+    """Predictor params from avals (shape-only; see kernels/matmul/ops.py)."""
+    m, n = a.shape
+    return {"m": int(m), "n": int(n)}
+
+
+def out_aval(a) -> Aval:
+    return Aval((a.shape[0] - 2, a.shape[1] - 2), a.dtype)
 
 
 def blur(a: jax.Array, *, bm: int = 128, bn: int = 128,

@@ -6,9 +6,20 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import resolve_interpret
+from repro.kernels import Aval, resolve_interpret
 from repro.kernels.conv2d import conv2d as _kernel
 from repro.kernels.conv2d import ref as _ref
+
+
+def abstract_params(a, w) -> dict:
+    """Predictor params from avals (shape-only; see kernels/matmul/ops.py)."""
+    m, n = a.shape
+    return {"m": int(m), "n": int(n), "r": int(w.shape[0])}
+
+
+def out_aval(a, w) -> Aval:
+    r = w.shape[0]
+    return Aval((a.shape[0] - r + 1, a.shape[1] - r + 1), a.dtype)
 
 
 def conv2d(a: jax.Array, w: jax.Array, *, bm: int = 128, bn: int = 128,

@@ -13,9 +13,22 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import resolve_interpret
+from repro.kernels import Aval, resolve_interpret
 from repro.kernels.flash_attention import flash_attention as _kernel
 from repro.kernels.flash_attention import ref as _ref
+
+
+def abstract_params(q, k, v) -> dict:
+    """Predictor params from avals (shape-only).  This entry point is
+    [B, H, S, D]; the runtime registry's ``flash_attention`` variant set is
+    built over ``models.attention`` ([B, S, H, D]) and carries its own hook
+    with the same param keys."""
+    b, h, s, d = q.shape
+    return {"b": int(b), "h": int(h), "s": int(s), "d": int(d)}
+
+
+def out_aval(q, k, v) -> Aval:
+    return Aval(tuple(q.shape), q.dtype)
 
 
 def _pad(q, k, v, bq, bk):

@@ -6,9 +6,21 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import resolve_interpret
+from repro.kernels import Aval, resolve_interpret
 from repro.kernels.matmul import matmul as _kernel
 from repro.kernels.matmul import ref as _ref
+
+
+def abstract_params(a, b) -> dict:
+    """Predictor params from avals — shape-only, safe to call without data
+    (the ``repro.api`` tracer derives NN+C features through this hook)."""
+    m, k = a.shape
+    _, n = b.shape
+    return {"m": int(m), "n": int(n), "k": int(k)}
+
+
+def out_aval(a, b) -> Aval:
+    return Aval((a.shape[0], b.shape[1]), a.dtype)
 
 
 def matmul(a: jax.Array, b: jax.Array, *, bm: int = 128, bn: int = 128,

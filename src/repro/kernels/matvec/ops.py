@@ -6,9 +6,19 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import resolve_interpret
+from repro.kernels import Aval, resolve_interpret
 from repro.kernels.matvec import matvec as _kernel
 from repro.kernels.matvec import ref as _ref
+
+
+def abstract_params(a, x) -> dict:
+    """Predictor params from avals (shape-only; see kernels/matmul/ops.py)."""
+    m, k = a.shape
+    return {"m": int(m), "k": int(k)}
+
+
+def out_aval(a, x) -> Aval:
+    return Aval((a.shape[0],), a.dtype)
 
 
 def matvec(a: jax.Array, x: jax.Array, *, bm: int = 256, bk: int = 512,

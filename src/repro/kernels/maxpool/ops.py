@@ -6,9 +6,21 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import resolve_interpret
+from repro.kernels import Aval, resolve_interpret
 from repro.kernels.maxpool import maxpool as _kernel
 from repro.kernels.maxpool import ref as _ref
+
+
+def abstract_params(a, *, r: int, s: int) -> dict:
+    """Predictor params from avals (shape-only; see kernels/matmul/ops.py).
+    ``r``/``s`` are static keyword operands and ride along as params."""
+    m, n = a.shape
+    return {"m": int(m), "n": int(n), "r": int(r), "s": int(s)}
+
+
+def out_aval(a, *, r: int, s: int) -> Aval:
+    m, n = a.shape
+    return Aval(((m - r) // s + 1, (n - r) // s + 1), a.dtype)
 
 
 def maxpool(a: jax.Array, *, r: int, s: int, bm: int = 128, bn: int = 128,

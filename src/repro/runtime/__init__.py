@@ -14,5 +14,7 @@ from repro.runtime.dispatch import (DispatchPolicy, Dispatcher, Selection,
                                     default_dispatcher, dispatch)
 from repro.runtime.fingerprint import Fingerprint, current_fingerprint
 from repro.runtime.online import OnlineConfig, OnlineRefiner
-from repro.runtime.registry import (KernelRegistry, RegisteredKernel,
-                                    Variant, default_registry)
+from repro.runtime.registry import (ATTENTION_SCHEDULE_GRID,
+                                    ATTENTION_SCHEDULES, KernelRegistry,
+                                    RegisteredKernel, Variant,
+                                    attention_flops, default_registry)

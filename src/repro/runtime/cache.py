@@ -30,7 +30,8 @@ from typing import Optional, Sequence
 
 import numpy as np
 
-from repro.core.nnc import (MLPModel, lightweight_dims, model_from_state)
+from repro.core.nnc import (MLPModel, lightweight_dims, mape,
+                            model_from_state)
 from repro.runtime.fingerprint import Fingerprint, current_fingerprint
 
 CACHE_VERSION = 1
@@ -66,6 +67,9 @@ class CacheEntry:
     dirty: bool = False
     version: int = 0                # bumped on every (re)fit; in-process
                                     # invalidation token for decision memos
+    fit_mape: Optional[float] = None  # training-set MAPE (%) of the last
+                                      # fit — the dispatcher's error band
+                                      # before any online observations
 
     @property
     def n_rows(self) -> int:
@@ -100,6 +104,7 @@ class CacheEntry:
             nf = X.shape[1]
             self.model = MLPModel(lightweight_dims(nf, 75, 1), epochs=epochs)
             self.model.fit(X, y)
+        self.fit_mape = float(mape(y, self.model.predict_np(X)))
         self.dirty = True
         self.version += 1
         return self.model
@@ -197,6 +202,7 @@ class TuningCache:
                     "n_rows": e.n_rows,
                     "buckets": [_bucket_to_json(b)
                                 for b in sorted(e.buckets)],
+                    "fit_mape": e.fit_mape,
                     "model": None}
             arrays = {"X": e.X, "y": e.y}
             if e.model is not None:
@@ -240,7 +246,7 @@ class TuningCache:
                 variant_names=list(meta["variant_names"]),
                 X=arrays["X"], y=arrays["y"],
                 buckets={_bucket_from_json(b) for b in meta["buckets"]},
-                model=model)
+                model=model, fit_mape=meta.get("fit_mape"))
         except (json.JSONDecodeError, KeyError, ValueError, OSError,
                 zipfile.BadZipFile):
             return None

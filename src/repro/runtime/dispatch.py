@@ -2,11 +2,14 @@
 
 ``dispatch(kernel, *args)`` ranks every registered variant with the cached
 NN+C model and executes only the predicted-best.  On a cold cache (no
-fitted model, or an uncovered shape bucket) it falls back to *measuring* a
-bounded candidate set — reusing the black-box timing protocol of
-``perfdata.measure._time`` — records the rows, and persists them; once
-enough rows accumulate the lightweight model is fitted and subsequent
-dispatches are pure prediction (<75-weight numpy forward, microseconds).
+fitted model) it falls back to *measuring* a bounded candidate set —
+reusing the black-box timing protocol of ``perfdata.measure._time`` —
+records the rows, and persists them; once enough rows accumulate the
+lightweight model is fitted and subsequent dispatches are pure prediction
+(<75-weight numpy forward, microseconds).  On an unseen shape bucket the
+confidence gate trusts the model only when the predicted variant spread
+clears the model's own error band; near-ties get their top-2 candidates
+measured instead (see ``DispatchPolicy.confidence_gate``).
 
 With ``policy.online=True`` every dispatch also records the *actual* wall
 time of the chosen variant and hands it to the ``OnlineRefiner``, which
@@ -35,7 +38,14 @@ class DispatchPolicy:
     min_window: float = 2e-3        # per-candidate timing window (seconds)
     min_rows_to_fit: int = 12       # fit the model once this many rows exist
     fit_epochs: int = 6000
-    trust_unseen_buckets: bool = True  # predict for unmeasured shape classes
+    # measure-when-uncertain: on an *unseen* shape bucket the model's argmin
+    # is trusted only when the predicted top-2 spread exceeds the model's own
+    # error band (rolling MAPE when online, else the fit-time MAPE); inside
+    # the band the top candidates are measured instead (the rows also buy
+    # bucket coverage).  confidence_gate=False restores blind trust.
+    confidence_gate: bool = True
+    gate_candidates: int = 2        # how many top candidates the gate times
+    default_error_band: float = 0.25  # relative band when no MAPE exists yet
     online: bool = False            # record actual times + refit
     refit_every: int = 24           # online: refit after k new rows
     refit_epochs: int = 2000
@@ -48,7 +58,7 @@ class Selection:
     kernel: str
     params: dict
     bucket: tuple
-    mode: str                       # predicted | measured | default
+    mode: str                       # predicted | measured | gated | default
     chosen: str
     predicted_s: Optional[dict]     # variant -> predicted seconds
     measured_s: Optional[dict]      # variant -> measured seconds (cold path)
@@ -69,6 +79,7 @@ class Dispatcher:
             if self.policy.online else None
         self.n_predicted = 0
         self.n_measured = 0
+        self.n_gated = 0
         self.n_default = 0
         # bounded: a long-running serving process must not leak a Selection
         # per dispatch
@@ -118,22 +129,42 @@ class Dispatcher:
 
         predicted = measured = rows = None
         memo_hit = False
-        warm = entry.model is not None and (
-            self.policy.trust_unseen_buckets or bucket in entry.buckets)
+        warm = entry.model is not None
         if warm:
+            # the per-shape memo is checked before anything else: an earlier
+            # decision for this exact shape (predicted OR gated-measured)
+            # stands until the next refit bumps entry.version
             memo_key = (kernel, tuple(sorted(params.items())))
             hit = self._decisions.get(memo_key)
             if hit is not None and hit[0] == entry.version:
                 _, idx, predicted = hit
                 memo_hit = True
+                mode = "predicted"
+                self.n_predicted += 1
             else:
                 rows = self.registry.feature_rows(kernel, params)
                 pred = entry.predict(rows)
-                idx = int(np.argmin(pred))
                 predicted = dict(zip(entry.variant_names, pred.tolist()))
+                order = np.argsort(pred)
+                gate = self.policy.confidence_gate \
+                    and bucket not in entry.buckets
+                if not gate or self._confident(pred, order, kernel, entry):
+                    idx = int(order[0])
+                    mode = "predicted"
+                    self.n_predicted += 1
+                else:
+                    # unseen shape class + near-tie: measure the top-2
+                    cand = [int(i)
+                            for i in order[:self.policy.gate_candidates]]
+                    idx, measured = self._measure(entry, rk, rows, args,
+                                                  params, bucket,
+                                                  candidates=cand)
+                    mode = "gated"
+                    self.n_gated += 1
+                # memoize either way — a gated dispatch stores the *measured*
+                # winner, so later calls of this shape reuse it instead of
+                # re-trusting the argmin the gate just judged unconfident
                 self._decisions[memo_key] = (entry.version, idx, predicted)
-            mode = "predicted"
-            self.n_predicted += 1
         elif self.policy.measure_on_cold:
             rows = self.registry.feature_rows(kernel, params)
             idx, measured = self._measure(entry, rk, rows, args, params,
@@ -169,34 +200,64 @@ class Dispatcher:
 
     __call__ = dispatch
 
-    def _measure(self, entry, rk, rows, args, params, bucket):
-        """Cold path: time a bounded candidate set and record the rows."""
-        n = min(len(rk.variants), self.policy.max_measure_candidates)
+    def _confident(self, pred, order, kernel, entry) -> bool:
+        """Is the predicted best separated from the runner-up by more than
+        the model's error band?  Single-variant kernels are always
+        confident (there is nothing to mis-rank)."""
+        if len(pred) < 2:
+            return True
+        best, second = float(pred[order[0]]), float(pred[order[1]])
+        spread = (second - best) / max(abs(best), 1e-12)
+        return spread > self._error_band(kernel, entry)
+
+    def _error_band(self, kernel, entry) -> float:
+        """Relative model error: rolling MAPE when online observations
+        exist, else the fit-time training MAPE, else the policy default."""
+        if self.refiner is not None:
+            m = self.refiner.rolling_mape(kernel)
+            if np.isfinite(m):
+                return m / 100.0
+        if entry.fit_mape is not None:
+            return entry.fit_mape / 100.0
+        return self.policy.default_error_band
+
+    def _measure(self, entry, rk, rows, args, params, bucket,
+                 candidates: Optional[list] = None):
+        """Cold/gated path: time a bounded candidate set, record the rows.
+
+        ``candidates`` (variant indices) narrows the set — the confidence
+        gate times only the predicted top-k instead of everything."""
+        if candidates is None:
+            candidates = list(range(min(len(rk.variants),
+                                        self.policy.max_measure_candidates)))
         times = []
-        for v in rk.variants[:n]:
+        for i in candidates:
+            v = rk.variants[i]
             times.append(_time(
                 lambda: jax.block_until_ready(v.call(args, params)),
                 min_window=self.policy.min_window))
-        entry.add_rows(rows[:n], times, bucket)
+        entry.add_rows(rows[candidates], times, bucket)
         if entry.model is None and entry.n_rows >= self.policy.min_rows_to_fit:
             entry.fit(epochs=self.policy.fit_epochs)
         self.cache.save(entry.kernel)
-        measured = dict(zip(entry.variant_names[:n], times))
-        return int(np.argmin(times)), measured
+        measured = {rk.variants[i].name: t for i, t in zip(candidates, times)}
+        return candidates[int(np.argmin(times))], measured
 
     # -- stats ---------------------------------------------------------------
     def reset_stats(self) -> None:
         """Clear counters/selection log (cache and decision memo survive) —
         call between phases so steady-state numbers aren't polluted by
         warm-up."""
-        self.n_predicted = self.n_measured = self.n_default = 0
+        self.n_predicted = self.n_measured = self.n_gated = 0
+        self.n_default = 0
         self.selections = deque(maxlen=self.policy.selection_log)
 
     def stats(self) -> dict:
         sel = list(self.selections)
         warm = [s for s in sel if s.mode == "predicted"]
         out = {"dispatches": len(sel), "predicted": self.n_predicted,
-               "measured": self.n_measured, "default": self.n_default}
+               "measured": self.n_measured, "gated": self.n_gated,
+               "default": self.n_default}
         if warm:
             oh = float(np.sum([s.overhead_s for s in warm]))
             kt = float(np.sum([s.kernel_s for s in warm]))

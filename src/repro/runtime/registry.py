@@ -18,15 +18,29 @@ paper's ``c`` augmentation, appended as the last column by
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Sequence
+from typing import Callable, Optional, Sequence
 
 import jax
 import numpy as np
 
-from repro.autotune.tuner import attention_flops
 from repro.core.features import blur_complexity
+from repro.kernels import Aval
 from repro.kernels.blur.ops import HOST_SCHEDULES, SCHEDULE_FEATURES
 from repro.models.attention import attend_chunked, attend_full
+
+
+def attention_flops(b: int, h: int, s: int, d: int) -> float:
+    """Analytic c for one causal attention call (qk^T + pv)."""
+    return 4.0 * b * h * s * s * d
+
+
+# Single source of truth for the chunked-attention (q_chunk, k_chunk)
+# schedule axis.  ATTENTION_SCHEDULE_GRID is the full measurement sweep the
+# autotuner walks (repro/autotune/tuner.py imports it); ATTENTION_SCHEDULES
+# is the curated subset the dispatcher ranks at run time.
+ATTENTION_SCHEDULE_GRID = tuple((q, k) for q in (64, 128, 256, 512)
+                                for k in (128, 256, 512, 1024))
+ATTENTION_SCHEDULES = ((128, 256), (256, 512), (512, 1024))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -44,6 +58,10 @@ class RegisteredKernel:
     params_of: Callable     # params_of(*args, **kwargs) -> dict
     feature_names: tuple    # column names, c excluded (it is always last)
     variants: tuple
+    # the uniform abstract hooks: shape-only derivations so the repro.api
+    # tracer can build predictor features and output avals without executing
+    abstract_params: Optional[Callable] = None  # (*avals, **kw) -> params
+    out_aval: Optional[Callable] = None         # (*avals, **kw) -> Aval
 
 
 class KernelRegistry:
@@ -75,6 +93,24 @@ class KernelRegistry:
     def params_of(self, kernel: str, *args, **kwargs) -> dict:
         return self.get(kernel).params_of(*args, **kwargs)
 
+    def abstract_params(self, kernel: str, *avals, **kwargs) -> dict:
+        """Predictor params from abstract values (anything with .shape)."""
+        rk = self.get(kernel)
+        if rk.abstract_params is None:
+            raise NotImplementedError(
+                f"kernel {kernel!r} registered without an abstract_params "
+                "hook; it cannot be traced")
+        return rk.abstract_params(*avals, **kwargs)
+
+    def out_aval(self, kernel: str, *avals, **kwargs) -> Aval:
+        """Output shape/dtype from abstract values, without executing."""
+        rk = self.get(kernel)
+        if rk.out_aval is None:
+            raise NotImplementedError(
+                f"kernel {kernel!r} registered without an out_aval hook; "
+                "it cannot be traced")
+        return rk.out_aval(*avals, **kwargs)
+
     def feature_rows(self, kernel: str, params: dict) -> np.ndarray:
         """[n_variants, F+1] candidate matrix, c as the LAST column (the
         layout ``nnc.slice_features`` and the whole perfdata pipeline use)."""
@@ -91,11 +127,6 @@ class KernelRegistry:
 def _matmul() -> RegisteredKernel:
     from repro.kernels.matmul import ops
 
-    def params_of(a, b):
-        m, k = a.shape
-        _, n = b.shape
-        return {"m": m, "n": n, "k": k}
-
     flops = lambda p: 2.0 * p["m"] * p["n"] * p["k"]
 
     def feat(block, pallas):
@@ -110,17 +141,15 @@ def _matmul() -> RegisteredKernel:
         variants.append(Variant(
             "matmul", f"pallas_{blk}",
             lambda args, p, _c=call: _c(*args), feat(float(blk), 1.0), flops))
-    return RegisteredKernel("matmul", params_of,
+    return RegisteredKernel("matmul", ops.abstract_params,
                             ("m", "n", "k", "block", "pallas"),
-                            tuple(variants))
+                            tuple(variants),
+                            abstract_params=ops.abstract_params,
+                            out_aval=ops.out_aval)
 
 
 def _matvec() -> RegisteredKernel:
     from repro.kernels.matvec import ops
-
-    def params_of(a, x):
-        m, k = a.shape
-        return {"m": m, "k": k}
 
     flops = lambda p: 2.0 * p["m"] * p["k"]
 
@@ -130,19 +159,16 @@ def _matvec() -> RegisteredKernel:
     ref = jax.jit(lambda a, x: ops.matvec(a, x, use_kernel=False))
     pall = jax.jit(lambda a, x: ops.matvec(a, x, bm=128, bk=128))
     return RegisteredKernel(
-        "matvec", params_of, ("m", "k", "block", "pallas"),
+        "matvec", ops.abstract_params, ("m", "k", "block", "pallas"),
         (Variant("matvec", "ref", lambda args, p: ref(*args),
                  feat(0.0, 0.0), flops),
          Variant("matvec", "pallas_128", lambda args, p: pall(*args),
-                 feat(128.0, 1.0), flops)))
+                 feat(128.0, 1.0), flops)),
+        abstract_params=ops.abstract_params, out_aval=ops.out_aval)
 
 
 def _conv2d() -> RegisteredKernel:
     from repro.kernels.conv2d import ops
-
-    def params_of(a, w):
-        m, n = a.shape
-        return {"m": m, "n": n, "r": w.shape[0]}
 
     flops = lambda p: 2.0 * (p["m"] - p["r"] + 1) * (p["n"] - p["r"] + 1) \
         * p["r"] ** 2
@@ -153,19 +179,16 @@ def _conv2d() -> RegisteredKernel:
     ref = jax.jit(lambda a, w: ops.conv2d(a, w, use_kernel=False))
     pall = jax.jit(lambda a, w: ops.conv2d(a, w, bm=32, bn=32))
     return RegisteredKernel(
-        "conv2d", params_of, ("m", "n", "r", "block", "pallas"),
+        "conv2d", ops.abstract_params, ("m", "n", "r", "block", "pallas"),
         (Variant("conv2d", "ref", lambda args, p: ref(*args),
                  feat(0.0, 0.0), flops),
          Variant("conv2d", "pallas_32", lambda args, p: pall(*args),
-                 feat(32.0, 1.0), flops)))
+                 feat(32.0, 1.0), flops)),
+        abstract_params=ops.abstract_params, out_aval=ops.out_aval)
 
 
 def _maxpool() -> RegisteredKernel:
     from repro.kernels.maxpool import ops, ref as ref_mod
-
-    def params_of(a, *, r, s):
-        m, n = a.shape
-        return {"m": m, "n": n, "r": r, "s": s}
 
     flops = lambda p: float((p["m"] // p["s"]) * (p["n"] // p["s"])
                             * p["r"] ** 2)
@@ -177,19 +200,18 @@ def _maxpool() -> RegisteredKernel:
     pall = jax.jit(lambda a, r, s: ops.maxpool(a, r=r, s=s, bm=32, bn=32),
                    static_argnames=("r", "s"))
     return RegisteredKernel(
-        "maxpool", params_of, ("m", "n", "r", "s", "block", "pallas"),
+        "maxpool", ops.abstract_params, ("m", "n", "r", "s", "block", "pallas"),
         (Variant("maxpool", "ref",
                  lambda args, p: ref(args[0], r=p["r"], s=p["s"]),
                  feat(0.0, 0.0), flops),
          Variant("maxpool", "pallas_32",
                  lambda args, p: pall(args[0], r=p["r"], s=p["s"]),
-                 feat(32.0, 1.0), flops)))
+                 feat(32.0, 1.0), flops)),
+        abstract_params=ops.abstract_params, out_aval=ops.out_aval)
 
 
 def _blur() -> RegisteredKernel:
-    def params_of(a):
-        m, n = a.shape
-        return {"m": m, "n": n}
+    from repro.kernels.blur import ops
 
     flops = lambda p: blur_complexity(p)
 
@@ -200,20 +222,23 @@ def _blur() -> RegisteredKernel:
         variants.append(Variant(
             "blur", sched, lambda args, p, _c=call: _c(args[0]),
             lambda p, _f=(sep, conv, nblk): [p["m"], p["n"], *_f], flops))
-    return RegisteredKernel("blur", params_of,
+    return RegisteredKernel("blur", ops.abstract_params,
                             ("m", "n", "separable", "conv", "n_blocks"),
-                            tuple(variants))
-
-
-# the autotuner's schedule axis (repro/autotune/tuner.py), registered as the
-# flash_attention variant set: one model ranks full vs chunked schedules
-ATTENTION_SCHEDULES = ((128, 256), (256, 512), (512, 1024))
+                            tuple(variants),
+                            abstract_params=ops.abstract_params,
+                            out_aval=ops.out_aval)
 
 
 def _flash_attention() -> RegisteredKernel:
-    def params_of(q, k, v):
+    # this variant set is built over models.attention ([B, S, H, D] layout),
+    # so its abstract hooks live here, not in kernels/flash_attention/ops.py
+    # (whose entry point is [B, H, S, D])
+    def abstract_params(q, k, v):
         b, s, h, d = q.shape
-        return {"b": b, "h": h, "s": s, "d": d}
+        return {"b": int(b), "h": int(h), "s": int(s), "d": int(d)}
+
+    def out_aval(q, k, v):
+        return Aval(tuple(q.shape), q.dtype)
 
     flops = lambda p: attention_flops(p["b"], p["h"], p["s"], p["d"])
 
@@ -231,9 +256,11 @@ def _flash_attention() -> RegisteredKernel:
         variants.append(Variant(
             "flash_attention", f"chunked_q{qc}_k{kc}",
             lambda args, p, _c=call: _c(*args), feat(qc, kc), flops))
-    return RegisteredKernel("flash_attention", params_of,
+    return RegisteredKernel("flash_attention", abstract_params,
                             ("b", "h", "s", "d", "q_chunk", "k_chunk"),
-                            tuple(variants))
+                            tuple(variants),
+                            abstract_params=abstract_params,
+                            out_aval=out_aval)
 
 
 _BUILDERS = {

@@ -1,0 +1,36 @@
+"""Predictor-seeded simulated "devices" for examples and tests.
+
+A simulated device is just a runtime ``Dispatcher`` whose fingerprinted
+tuning cache was filled with synthetic (features, time) rows at a given
+sustained FLOP rate and fitted with the closed-form linear baseline —
+which gives the DAG scheduler honest *absolute-time* predictions without
+needing two real machines in CI.  Everything downstream (scheduling,
+compile, execution) is the production path.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.nnc import LinearModel
+from repro.runtime.cache import TuningCache, shape_bucket
+from repro.runtime.dispatch import Dispatcher
+from repro.runtime.fingerprint import Fingerprint
+
+
+def fake_matmul_device(root: str, name: str, flops_per_s: float,
+                       registry, seed: int = 0) -> Dispatcher:
+    """A matmul-tuned dispatcher running at ``flops_per_s`` sustained."""
+    fp = Fingerprint("sim", name, 1, 1, ("float32",))
+    cache = TuningCache(root=root, fingerprint=fp)
+    rk = registry.get("matmul")
+    entry = cache.entry("matmul", feature_names=rk.feature_names,
+                        variant_names=registry.variant_names("matmul"))
+    rng = np.random.RandomState(seed)
+    for _ in range(40):
+        p = {"m": int(rng.randint(16, 2048)), "n": int(rng.randint(16, 2048)),
+             "k": int(rng.randint(16, 2048))}
+        rows = registry.feature_rows("matmul", p)
+        entry.add_rows(rows, rows[:, -1] / flops_per_s, shape_bucket(p))
+    entry.fit(model=LinearModel())
+    cache.save()
+    return Dispatcher(registry=registry, cache=cache)

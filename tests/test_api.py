@@ -1,0 +1,303 @@
+"""repro.api: trace/eager parity, IR validation, export round-trip,
+schedule determinism, and the paper's two-device motivating example."""
+import json
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import (KERNEL_OPS, Program, gantt_csv, ops, trace,
+                       use_dispatcher)
+from repro.api.program import InputSpec, Node
+from repro.core.nnc import LinearModel
+from repro.kernels import Aval
+from repro.runtime import (Dispatcher, Fingerprint, TuningCache,
+                           default_registry, shape_bucket)
+
+ALL_KERNELS = ["matmul", "matvec", "conv2d", "maxpool", "blur",
+               "flash_attention"]
+KWARGS = {"maxpool": {"r": 2, "s": 2}}
+
+
+def _arg_shapes(kernel):
+    """Per-kernel operand shapes; index 0 is the parity-test workload."""
+    return {
+        "matmul": [((48, 40), (40, 32)), ((64, 64), (64, 64)),
+                   ((96, 80), (80, 72))],
+        "matvec": [((48, 40), (40,)), ((64, 64), (64,)), ((96, 80), (80,))],
+        "conv2d": [((40, 40), (3, 3)), ((64, 48), (3, 3)), ((80, 80), (3, 3))],
+        "maxpool": [((32, 32),), ((64, 48),), ((80, 64),)],
+        "blur": [((40, 40),), ((64, 48),), ((96, 80),)],
+        "flash_attention": [((1, 32, 2, 8),) * 3, ((1, 64, 2, 8),) * 3,
+                            ((2, 48, 2, 8),) * 3],
+    }[kernel]
+
+
+def _build_args(kernel, rng, i=0):
+    args = tuple(jnp.asarray(rng.rand(*s), jnp.float32)
+                 for s in _arg_shapes(kernel)[i])
+    return args, dict(KWARGS.get(kernel, {}))
+
+
+def _seed_entry(d, kernel, speed=1e9):
+    """Warm a dispatcher's cache for ``kernel``: rows for every shape in
+    ``_arg_shapes`` at an analytic-FLOPs rate (slight per-variant slowdown
+    breaks ties deterministically), fitted with the closed-form model."""
+    reg = d.registry
+    rk = reg.get(kernel)
+    entry = d.cache.entry(kernel, feature_names=rk.feature_names,
+                          variant_names=reg.variant_names(kernel))
+    rng = np.random.RandomState(7)
+    for i in range(len(_arg_shapes(kernel))):
+        args, kw = _build_args(kernel, rng, i)
+        p = reg.params_of(kernel, *args, **kw)
+        rows = reg.feature_rows(kernel, p)
+        times = rows[:, -1] / speed * (1.0 + 0.07 * np.arange(len(rows)))
+        entry.add_rows(rows, times, shape_bucket(p))
+    entry.fit(model=LinearModel())
+    d.cache.save(kernel)
+    return entry
+
+
+def _dispatcher(tmp_path, kernel, sub="tc"):
+    reg = default_registry(include=[kernel])
+    d = Dispatcher(registry=reg, cache=TuningCache(root=str(tmp_path / sub)))
+    _seed_entry(d, kernel)
+    return d
+
+
+# --------------------------------------------------------------------------
+# acceptance: trace/eager parity for every kernel in the default registry
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kernel", ALL_KERNELS)
+def test_trace_eager_parity(tmp_path, kernel):
+    d = _dispatcher(tmp_path, kernel)
+    rng = np.random.RandomState(0)
+    args, kw = _build_args(kernel, rng, 0)
+    with use_dispatcher(d):
+        eager = KERNEL_OPS[kernel](*args, **kw)
+        chosen_eager = d.selections[-1].chosen
+        with trace() as tb:
+            lazy = KERNEL_OPS[kernel](*args, **kw)
+        compiled = tb.compile()
+        out = compiled()
+        chosen_compiled = d.selections[-1].chosen
+    # nothing executed or measured at trace time; avals were inferred
+    node = tb.program.nodes[0]
+    assert d.n_measured == 0 and d.n_gated == 0
+    assert lazy.shape == node.out_shape == tuple(out.shape) \
+        == tuple(eager.shape)
+    assert node.params == d.registry.params_of(kernel, *args, **kw)
+    # same dispatcher, same model, same memo -> same variant, same numbers
+    assert chosen_compiled == chosen_eager
+    np.testing.assert_allclose(np.asarray(out), np.asarray(eager),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_abstract_hooks_match_concrete():
+    """The uniform abstract_params hook must agree with the concrete
+    params_of on pure avals (no data, no execution)."""
+    reg = default_registry()
+    rng = np.random.RandomState(0)
+    for kernel in ALL_KERNELS:
+        args, kw = _build_args(kernel, rng, 0)
+        avals = [Aval(tuple(a.shape), str(a.dtype)) for a in args]
+        assert reg.abstract_params(kernel, *avals, **kw) \
+            == reg.params_of(kernel, *args, **kw)
+        out = reg.out_aval(kernel, *avals, **kw)
+        assert all(isinstance(s, int) for s in out.shape)
+
+
+# --------------------------------------------------------------------------
+# IR construction + validation
+# --------------------------------------------------------------------------
+
+def test_trace_builds_expected_dag(tmp_path):
+    d = _dispatcher(tmp_path, "matmul")
+    rng = np.random.RandomState(0)
+    a = jnp.asarray(rng.rand(48, 40), jnp.float32)
+    b = jnp.asarray(rng.rand(40, 32), jnp.float32)
+    c = jnp.asarray(rng.rand(32, 32), jnp.float32)
+    with use_dispatcher(d):
+        with trace() as tb:
+            x = ops.matmul(a, b)
+            y = ops.matmul(x, c)
+            z = ops.matmul(a, b)         # reuses the same inputs
+    prog = tb.program
+    assert [s.name for s in prog.inputs] == ["in0", "in1", "in2"]
+    assert prog.node(x.name).deps == ("in0", "in1")
+    assert prog.node(y.name).deps == (x.name, "in2")
+    assert prog.node(z.name).deps == ("in0", "in1")   # dedup by identity
+    assert set(prog.outputs) == {y.name, z.name}      # unconsumed leaves
+    assert prog.node(y.name).params == {"m": 48, "n": 32, "k": 32}
+    tasks = {t.name: t for t in prog.to_kernel_tasks()}
+    assert tasks[y.name].deps == (x.name,)            # inputs are not tasks
+    assert tasks[x.name].deps == ()
+
+
+def test_program_validation_rejects_malformed():
+    spec = InputSpec("in0", (4, 4), "float32")
+    node = lambda name, deps: Node(name, "blur", tuple(deps), {"m": 4, "n": 4},
+                                   {}, (2, 2), "float32")
+    with pytest.raises(ValueError, match="undefined value"):
+        Program((spec,), (node("n0", ["ghost"]),), ("n0",))
+    with pytest.raises(ValueError, match="duplicate"):
+        Program((spec,), (node("in0", ["in0"]),), ("in0",))
+    with pytest.raises(ValueError, match="unknown output"):
+        Program((spec,), (node("n0", ["in0"]),), ("ghost",))
+    with pytest.raises(ValueError, match="no outputs"):
+        Program((spec,), (node("n0", ["in0"]),), ())
+
+
+def test_program_check_catches_stale_params(tmp_path):
+    d = _dispatcher(tmp_path, "matmul")
+    rng = np.random.RandomState(0)
+    args, _ = _build_args("matmul", rng, 0)
+    with use_dispatcher(d):
+        with trace() as tb:
+            ops.matmul(*args)
+    doc = tb.program.to_json()
+    doc["nodes"][0]["params"]["k"] = 999          # hand-edited drift
+    with pytest.raises(ValueError, match="stored params"):
+        Program.from_json(doc, registry=d.registry)
+    Program.from_json(doc)                        # structural-only load is fine
+
+
+# --------------------------------------------------------------------------
+# export: JSON round-trip, schema gate, recompile-and-run
+# --------------------------------------------------------------------------
+
+def test_export_roundtrip_compile(tmp_path):
+    d = _dispatcher(tmp_path, "maxpool")
+    rng = np.random.RandomState(0)
+    args, kw = _build_args("maxpool", rng, 0)
+    with use_dispatcher(d):
+        with trace() as tb:
+            ops.maxpool(*args, **kw)
+        compiled = tb.compile()
+        out1 = compiled()
+        # through the wire: dict -> text -> dict -> Program -> compile
+        doc = json.loads(json.dumps(tb.program.to_json()))
+        prog2 = Program.from_json(doc, registry=d.registry)
+        assert prog2 == tb.program
+        assert prog2.node(tb.program.nodes[0].name).kwargs == {"r": 2, "s": 2}
+        out2 = prog2.compile()(*args)             # no captured bindings
+    np.testing.assert_array_equal(np.asarray(out1), np.asarray(out2))
+
+    path = str(tmp_path / "prog.json")
+    tb.program.save(path)
+    assert Program.load(path) == tb.program
+
+
+def test_export_rejects_unknown_schema(tmp_path):
+    d = _dispatcher(tmp_path, "blur")
+    rng = np.random.RandomState(0)
+    args, _ = _build_args("blur", rng, 0)
+    with use_dispatcher(d):
+        with trace() as tb:
+            ops.blur(*args)
+    doc = tb.program.to_json()
+    doc["schema"] = 99
+    with pytest.raises(ValueError, match="unknown program schema"):
+        Program.from_json(doc)
+
+
+def test_compile_cold_cache_raises(tmp_path):
+    reg = default_registry(include=["blur"])
+    d = Dispatcher(registry=reg, cache=TuningCache(root=str(tmp_path / "tc")))
+    rng = np.random.RandomState(0)
+    with use_dispatcher(d):
+        with trace() as tb:
+            ops.blur(jnp.asarray(rng.rand(40, 40), jnp.float32))
+        with pytest.raises(ValueError, match="no fitted model"):
+            tb.compile()
+
+
+# --------------------------------------------------------------------------
+# scheduling: determinism under a fixed cache + the paper's §1 example
+# --------------------------------------------------------------------------
+
+def _fake_device(tmp_path, name, speed, reg):
+    from repro.runtime.simdev import fake_matmul_device
+    return fake_matmul_device(str(tmp_path / "devs"), name, speed, reg)
+
+
+def _two_matmul_program(reg):
+    rng = np.random.RandomState(0)
+    with trace(registry=reg) as tb:
+        small = ops.matmul(jnp.asarray(rng.rand(64, 64), jnp.float32),
+                           jnp.asarray(rng.rand(64, 64), jnp.float32))
+        big = ops.matmul(jnp.asarray(rng.rand(1024, 1024), jnp.float32),
+                         jnp.asarray(rng.rand(1024, 1024), jnp.float32))
+    return tb.program, small.name, big.name
+
+
+def test_two_device_schedule_small_matmul_on_cpu(tmp_path):
+    """Acceptance: the paper's two-matmul DAG on two fake devices — the
+    small matmul goes to the slow device exactly because the *absolute*
+    predicted times say the fast device should stay free for the big one."""
+    reg = default_registry(include=["matmul"])
+    devices = {"cpu": _fake_device(tmp_path, "cpu", 1e9, reg),
+               "gpu": _fake_device(tmp_path, "gpu", 1e11, reg)}
+    prog, small, big = _two_matmul_program(reg)
+    compiled = prog.compile(devices=devices)
+
+    p_small = prog.node(small).params
+    p_big = prog.node(big).params
+    t = {(n, dev): disp.predict_time("matmul", p)
+         for n, p in [("small", p_small), ("big", p_big)]
+         for dev, disp in devices.items()}
+    # predicted absolute times put the small matmul on the CPU: running it
+    # there finishes before the GPU would even get to it
+    assert t[("big", "gpu")] < t[("big", "cpu")]
+    assert t[("small", "cpu")] < t[("big", "gpu")] + t[("small", "gpu")]
+    assert compiled.device_of(big) == "gpu"
+    assert compiled.device_of(small) == "cpu"
+    assert compiled.makespan >= t[("big", "gpu")]
+
+    csv = gantt_csv(compiled)
+    assert csv.splitlines()[0] == "task,kernel,device,start_s,finish_s"
+    assert len(csv.strip().splitlines()) == 3
+
+
+def test_run_schedule_bridge_orders_by_start_and_checks_deps():
+    from repro.core.scheduler import (Assignment, KernelTask, run_schedule)
+    tasks = [KernelTask("a", "k", {}), KernelTask("b", "k", {}, deps=("a",)),
+             KernelTask("c", "k", {})]
+    assignments = {"a": Assignment("d0", 0.0, 1.0),
+                   "b": Assignment("d1", 1.0, 2.0),
+                   "c": Assignment("d1", 0.0, 1.0)}
+    ran = []
+    results = run_schedule(tasks, assignments,
+                           lambda t, dev: ran.append((t.name, dev)) or t.name)
+    assert [n for n, _ in ran] == ["a", "c", "b"]    # start order, dep-safe
+    assert ran[0][1] == "d0" and results["b"] == "b"
+    # a dependency scheduled to start before its producer fails loudly
+    bad = {"a": Assignment("d0", 2.0, 3.0), "b": Assignment("d1", 0.0, 1.0),
+           "c": Assignment("d1", 0.0, 1.0)}
+    with pytest.raises(ValueError, match="violates dependencies"):
+        run_schedule(tasks, bad, lambda t, dev: None)
+
+
+def test_schedule_deterministic_under_fixed_cache(tmp_path):
+    """Same persisted caches -> bit-identical models -> identical schedule
+    across fresh dispatcher processes."""
+    reg = default_registry(include=["matmul"])
+    first = {"cpu": _fake_device(tmp_path, "cpu", 1e9, reg),
+             "gpu": _fake_device(tmp_path, "gpu", 1e11, reg)}
+    prog, _, _ = _two_matmul_program(reg)
+    a1 = prog.compile(devices=first).assignments
+
+    def reload(name):
+        fp = Fingerprint("sim", name, 1, 1, ("float32",))
+        cache = TuningCache(root=str(tmp_path / "devs"), fingerprint=fp)
+        return Dispatcher(registry=reg, cache=cache)
+
+    second = {"cpu": reload("cpu"), "gpu": reload("gpu")}
+    a2 = prog.compile(devices=second).assignments
+    assert set(a1) == set(a2)
+    for name in a1:
+        assert a1[name].device == a2[name].device
+        assert a1[name].start == a2[name].start
+        assert a1[name].finish == a2[name].finish

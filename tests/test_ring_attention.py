@@ -47,6 +47,15 @@ SCRIPT = textwrap.dedent("""
                 q, k, v, causal=causal, window=window) ** 2))(q)
             gerr = float(jnp.max(jnp.abs(g - g2)))
             assert gerr < 5e-5, (causal, window, s, gerr)
+    # q_offset narrows the masked-block skip window — numerics must hold
+    s = 32
+    q = jnp.asarray(rng.randn(2, s, 3, 16) * 0.4, jnp.float32)
+    k = jnp.asarray(rng.randn(2, s, 3, 16) * 0.4, jnp.float32)
+    v = jnp.asarray(rng.randn(2, s, 3, 16), jnp.float32)
+    out = jax.jit(lambda q, k, v: ring_attention(
+        q, k, v, mesh=mesh, causal=True, q_offset=5))(q, k, v)
+    ref = attend_full(q, k, v, causal=True, q_offset=5)
+    assert float(jnp.max(jnp.abs(out - ref))) < 2e-5
     print("RING_OK")
 """).replace("CASES", repr(CASES))
 
@@ -72,6 +81,37 @@ def test_ring_attention_single_device(causal, window, seq):
         q, k, v, mesh=mesh, causal=causal, window=window))(q, k, v)
     ref = attend_full(q, k, v, causal=causal, window=window)
     assert float(jnp.max(jnp.abs(out - ref))) < 2e-5
+
+
+def test_causal_skip_predicate():
+    """The static half of the masked-block skip: at hop ``step`` the wrapped
+    block (held by devices idx < step) is fully causally masked iff every
+    key position src*s_loc exceeds the largest query position
+    idx*s_loc + s_loc - 1 + q_offset — brute-forced here over positions."""
+    from repro.dist.ring_attention import _causal_skip_possible
+
+    for n in (2, 4):
+        for s_loc in (1, 4, 8):
+            for q_offset in (0, 3, s_loc, 3 * s_loc):
+                for step in range(n):
+                    want_any = False
+                    for idx in range(step):       # devices holding a wrap
+                        src = (idx - step) % n
+                        min_k = src * s_loc
+                        max_q = idx * s_loc + s_loc - 1 + q_offset
+                        fully_masked = min_k > max_q
+                        # the predicate must never skip a visible block
+                        if _causal_skip_possible(step, n, s_loc, q_offset):
+                            assert fully_masked, (n, s_loc, q_offset, step)
+                        want_any = want_any or fully_masked
+                    # ...and must fire whenever every wrapped device is
+                    # masked (it is idx-independent, so any == all here)
+                    if want_any:
+                        assert _causal_skip_possible(step, n, s_loc,
+                                                     q_offset)
+    # causal q_offset=0: every hop after the diagonal one is skippable
+    assert all(_causal_skip_possible(step, 4, 8, 0) for step in range(1, 4))
+    assert not _causal_skip_possible(0, 4, 8, 0)
 
 
 @pytest.mark.slow

@@ -178,6 +178,95 @@ def test_dispatch_reload_makes_identical_selections(tmp_path):
 
 
 # --------------------------------------------------------------------------
+# confidence gate: unseen buckets measure near-ties, trust clear winners
+# --------------------------------------------------------------------------
+
+def _toy_registry(slowdown=1.0):
+    """Two-variant toy kernel whose calls are near-free; variant v1's
+    simulated training time is ``slowdown`` x v0's."""
+    from repro.kernels import Aval
+    from repro.runtime.registry import (KernelRegistry, RegisteredKernel,
+                                        Variant)
+
+    def abstract_params(a):
+        return {"m": int(a.shape[0])}
+
+    flops = lambda p: float(p["m"])
+    variants = tuple(
+        Variant("toy", name, lambda args, p: jnp.asarray(args[0]) * 1.0,
+                lambda p, _i=float(i): [p["m"], _i], flops)
+        for i, name in enumerate(("v0", "v1")))
+    reg = KernelRegistry()
+    reg.register(RegisteredKernel(
+        "toy", abstract_params, ("m", "variant"), variants,
+        abstract_params=abstract_params,
+        out_aval=lambda a: Aval(tuple(a.shape), a.dtype)))
+    return reg
+
+
+def _gated_dispatcher(tmp_path, slowdown):
+    """Fitted on seen buckets m in [32..4096] (wide enough that the linear
+    baseline log-scales m and fits exactly); v1 is ``slowdown`` x v0."""
+    reg = _toy_registry()
+    d = Dispatcher(registry=reg,
+                   cache=TuningCache(root=str(tmp_path / "tc")),
+                   policy=DispatchPolicy(min_window=1e-4))
+    entry = d._entry("toy")
+    for m in (32, 128, 512, 2048, 4096):
+        rows = reg.feature_rows("toy", {"m": m})
+        entry.add_rows(rows, [m / 1e6, slowdown * m / 1e6],
+                       shape_bucket({"m": m}))
+    entry.fit(model=LinearModel())
+    assert entry.fit_mape is not None and entry.fit_mape < 5.0
+    return d
+
+
+def test_confidence_gate_measures_near_tie_on_unseen_bucket(tmp_path):
+    d = _gated_dispatcher(tmp_path, slowdown=1.0)    # variants indistinct
+    a = jnp.ones((32768,), jnp.float32)              # unseen shape class
+    d.dispatch("toy", a)
+    sel = d.selections[-1]
+    assert sel.mode == "gated" and d.n_gated == 1
+    assert sel.predicted_s is not None               # model ran first...
+    assert set(sel.measured_s) == {"v0", "v1"}       # ...then timed top-2
+    # the gate's rows bought bucket coverage: same shape is now warm
+    d.dispatch("toy", a)
+    assert d.selections[-1].mode == "predicted"
+    assert d.n_gated == 1 and d.n_measured == 0
+
+
+def test_confidence_gate_trusts_separated_predictions(tmp_path):
+    d = _gated_dispatcher(tmp_path, slowdown=10.0)   # 10x spread >> band
+    a = jnp.ones((32768,), jnp.float32)              # unseen shape class
+    d.dispatch("toy", a)
+    sel = d.selections[-1]
+    assert sel.mode == "predicted" and sel.chosen == "v0"
+    assert d.n_gated == 0 and d.n_measured == 0
+    assert sel.measured_s is None
+
+
+def test_confidence_gate_off_restores_blind_trust(tmp_path):
+    reg = _toy_registry()
+    d = Dispatcher(registry=reg,
+                   cache=TuningCache(root=str(tmp_path / "tc")),
+                   policy=DispatchPolicy(confidence_gate=False))
+    entry = d._entry("toy")
+    for m in (32, 64, 128):
+        rows = reg.feature_rows("toy", {"m": m})
+        entry.add_rows(rows, [m / 1e6, m / 1e6], shape_bucket({"m": m}))
+    entry.fit(model=LinearModel())
+    d.dispatch("toy", jnp.ones((8192,), jnp.float32))
+    assert d.selections[-1].mode == "predicted"      # near-tie, trusted anyway
+
+
+def test_fit_mape_persists_in_cache(tmp_path):
+    cache, entry, _ = _filled_cache(tmp_path)
+    assert entry.fit_mape is not None
+    reloaded = TuningCache(root=str(tmp_path / "tc")).entry("synth")
+    assert reloaded.fit_mape == entry.fit_mape
+
+
+# --------------------------------------------------------------------------
 # online refinement on a drifting workload (simulated devices)
 # --------------------------------------------------------------------------
 

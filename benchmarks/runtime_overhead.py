@@ -26,7 +26,7 @@ QUICK_SHAPES = [(384, 384), (512, 512), (768, 768), (1024, 1024)]
 def run(quick: bool = False,
         out_path: str = "results/runtime_overhead.json",
         cache_root: str = "results/tunecache") -> dict:
-    from repro.perfdata.measure import _time
+    from repro.perfdata.measure import time_callable
     from repro.runtime import (Dispatcher, DispatchPolicy, TuningCache,
                                default_registry)
     import jax
@@ -62,7 +62,7 @@ def run(quick: bool = False,
     cases = {}
     for (m, n), a in arrays.items():
         params = {"m": m, "n": n}
-        times = {v.name: _time(
+        times = {v.name: time_callable(
             lambda: jax.block_until_ready(v.call((a,), params)),
             min_window=2e-3) for v in rk.variants}
         chosen = d.predict_times("blur", params)

@@ -3,22 +3,46 @@
 ``compile_program`` fans the program's kernel tasks through the
 ``core.scheduler`` earliest-finish-time scheduler, with absolute times
 coming from ``predictor_from_runtime`` over per-device runtime dispatchers
-(each carrying its own fingerprinted tuning cache).  The result is a
-``CompiledProgram``: calling it executes every node on its assigned device
-with the predicted-best variant — per-shape decisions are memoized inside
-each dispatcher, so steady-state re-execution is dict hits, not model
-forwards.  A cold cache raises (``predictor_from_runtime``'s contract): a
-schedule built from unfitted predictions would be silent garbage.
+(each carrying its own fingerprinted tuning cache) and — when a ``comm``
+model is given — cross-device edges priced by predicted transfer time.
+The result is a ``CompiledProgram`` holding the schedule, the buffer
+placement table, and the materialized ``Transfer`` tasks.
+
+Execution has two interchangeable back ends over the same schedule:
+
+- ``executor="sequential"`` — the reference bridge: every node in frozen
+  start-time order on the calling thread (host-resident values, no
+  transfers).  Kept bit-exact: the async path must reproduce it per node.
+- ``executor="async"`` — ``repro.exec.AsyncExecutor``: one worker per
+  device plus one per link lane; nodes fire when their deps resolve, so
+  independent branches genuinely overlap and transfers run concurrently
+  with compute.  Both paths record an ``ExecutionTrace`` (``last_trace``).
+
+Input shape specs are *bucketed*: a call whose shapes fall in the same
+``runtime.cache.shape_class`` as the compiled specs reuses the schedule
+(the graph is re-type-checked through the abstract hooks first); only a
+different shape class forces a re-trace/re-compile.  A cold cache raises
+(``predictor_from_runtime``'s contract): a schedule built from unfitted
+predictions would be silent garbage.
 """
 from __future__ import annotations
 
 import dataclasses
+import time
+from typing import Callable, Optional
 
 import numpy as np
 
 from repro.api.program import Program
 from repro.core.scheduler import (Assignment, execution_order, makespan,
                                   predictor_from_runtime, schedule)
+from repro.exec.buffers import BufferTable, plan_buffers, value_nbytes
+from repro.exec.executor import AsyncExecutor, ExecTask
+from repro.exec.trace import ExecutionTrace
+from repro.kernels import Aval
+from repro.runtime.cache import shape_class
+
+EXECUTORS = ("sequential", "async")
 
 
 def _resolve_devices(devices, policy) -> dict:
@@ -52,17 +76,30 @@ def _resolve_devices(devices, policy) -> dict:
 
 
 def compile_program(program: Program, devices=None, policy=None,
-                    bindings=None) -> "CompiledProgram":
+                    bindings=None, executor: str = "sequential",
+                    comm=None, transfer=None) -> "CompiledProgram":
+    """``comm`` is a ``repro.exec.CommModel`` (or a bare
+    ``(src, dst, nbytes) -> seconds`` callable) that makes the EFT
+    schedule transfer-aware; ``transfer`` is the physical move hook
+    ``(value, Transfer) -> value`` the async path applies per materialized
+    transfer (None: same-host devices share memory, the move is free)."""
+    if executor not in EXECUTORS:
+        raise ValueError(f"executor must be one of {EXECUTORS}, "
+                         f"got {executor!r}")
     dispatchers = _resolve_devices(devices, policy)
     for disp in dispatchers.values():
         program.check(disp.registry)
     tasks = program.to_kernel_tasks()
     predict = predictor_from_runtime(dispatchers)
-    assignments = schedule(tasks, predict, list(dispatchers))
+    comm_fn = comm.comm_fn() if hasattr(comm, "comm_fn") else comm
+    assignments = schedule(tasks, predict, list(dispatchers), comm=comm_fn)
     return CompiledProgram(program=program, dispatchers=dispatchers,
                            assignments=assignments,
                            bindings=dict(bindings or {}),
-                           order=execution_order(tasks, assignments))
+                           order=execution_order(tasks, assignments),
+                           executor=executor, comm=comm_fn,
+                           buffers=plan_buffers(program, assignments),
+                           transfer=transfer)
 
 
 @dataclasses.dataclass
@@ -73,11 +110,22 @@ class CompiledProgram:
     bindings: dict                    # input name -> default concrete array
     order: list                       # KernelTasks, frozen execution order
                                       # (dependency-checked at compile time)
+    executor: str = "sequential"      # default back end for __call__
+    comm: Optional[Callable] = None   # (src, dst, nbytes) -> seconds
+    buffers: Optional[BufferTable] = None
+    transfer: Optional[Callable] = None   # (value, Transfer) -> value
+    last_trace: Optional[ExecutionTrace] = None  # set by every execution
 
     @property
     def makespan(self) -> float:
-        """Predicted end-to-end seconds of the scheduled DAG."""
+        """Predicted end-to-end seconds of the scheduled DAG (transfer
+        delays included when compiled with a comm model)."""
         return makespan(self.assignments)
+
+    @property
+    def transfers(self) -> tuple:
+        """The materialized cross-device ``Transfer`` tasks."""
+        return self.buffers.transfers if self.buffers is not None else ()
 
     def device_of(self, node_name: str) -> str:
         return self.assignments[node_name].device
@@ -92,11 +140,8 @@ class CompiledProgram:
                          "finish_s": a.finish})
         return sorted(rows, key=lambda r: (r["start_s"], r["task"]))
 
-    def __call__(self, *args, **named):
-        """Execute the schedule.  Inputs bind positionally (program input
-        order), by name, or fall back to the bindings captured at trace
-        time; shapes must match the compiled specs (params — and therefore
-        the schedule — were derived from them)."""
+    # -- input binding -------------------------------------------------------
+    def _bind(self, args, named) -> dict:
         env = dict(self.bindings)
         specs = self.program.inputs
         if len(args) > len(specs):
@@ -111,19 +156,135 @@ class CompiledProgram:
         missing = [s.name for s in specs if s.name not in env]
         if missing:
             raise TypeError(f"unbound inputs {missing}")
+        exact = True
         for spec in specs:
             got = tuple(np.shape(env[spec.name]))
-            if got != tuple(spec.shape):
+            if got == tuple(spec.shape):
+                continue
+            exact = False
+            if shape_class(got) != shape_class(spec.shape):
                 raise ValueError(
-                    f"input {spec.name!r}: shape {got} != compiled spec "
-                    f"{tuple(spec.shape)} (re-trace and re-compile for new "
-                    "shapes)")
+                    f"input {spec.name!r}: shape {got} is outside the "
+                    f"compiled spec's shape class "
+                    f"(spec {tuple(spec.shape)}, class "
+                    f"{shape_class(spec.shape)}) — re-trace and re-compile "
+                    "for a new shape class")
+        if not exact:
+            # same shape class: reuse the schedule, but re-type-check the
+            # graph over the actual avals so an internally inconsistent
+            # binding (e.g. disagreeing contraction dims) fails here, not
+            # deep inside a kernel
+            registry = next(iter(self.dispatchers.values())).registry
 
+            def aval_of(v):
+                # read .dtype off the array when it has one — np.asarray on
+                # a jax device array would copy the whole buffer to host
+                dtype = getattr(v, "dtype", None)
+                if dtype is None:
+                    dtype = np.asarray(v).dtype
+                return Aval(tuple(np.shape(v)), dtype)
+            avals = {s.name: aval_of(env[s.name]) for s in specs}
+            for node in self.program.nodes:
+                ins = [avals[d] for d in node.deps]
+                registry.abstract_params(node.kernel, *ins, **node.kwargs)
+                avals[node.name] = registry.out_aval(node.kernel, *ins,
+                                                     **node.kwargs)
+        return env
+
+    # -- execution back ends -------------------------------------------------
+    def _run_sequential(self, env) -> None:
+        """The reference bridge: frozen start-time order, calling thread."""
+        tracer = ExecutionTrace()
+        # installed up front so a mid-run failure leaves the partial trace
+        # (the events up to the dying node), not the previous run's
+        self.last_trace = tracer
         node_by = {n.name: n for n in self.program.nodes}
         for task in self.order:
             node = node_by[task.name]
-            env[task.name] = self.dispatchers[
-                self.assignments[task.name].device].dispatch(
+            dev = self.assignments[task.name].device
+            t0 = time.perf_counter()
+            env[task.name] = self.dispatchers[dev].dispatch(
                 node.kernel, *(env[d] for d in node.deps), **node.kwargs)
+            tracer.record(task.name, "compute", dev, t0, time.perf_counter())
+
+    def _exec_tasks(self, env) -> list[ExecTask]:
+        """Lower the scheduled program to executor tasks: one compute task
+        per node on its assigned device, one transfer task per materialized
+        move on its link lane; priorities follow the predicted timeline."""
+        node_by = {n.name: n for n in self.program.nodes}
+        tasks: list[ExecTask] = []
+        for tr in self.buffers.transfers:
+            from_node = tr.value in node_by
+            # a node output can move only after it exists; input payloads
+            # are ready at t=0
+            deps = (tr.value,) if from_node else ()
+            prio = self.assignments[tr.value].finish if from_node else 0.0
+
+            def move(env_, tr=tr, from_node=from_node):
+                v = env_[tr.value] if from_node else env[tr.value]
+                if self.transfer is None:
+                    return v
+                # re-size the payload from the live value: under shape-class
+                # reuse the actual arrays may be smaller than the compiled
+                # specs, and a real hook sizing its copy from tr.nbytes must
+                # never overread
+                shape = np.shape(v)
+                dtype = getattr(v, "dtype", None)
+                if dtype is None:
+                    dtype = np.asarray(v).dtype
+                live = dataclasses.replace(
+                    tr, nbytes=value_nbytes(shape, dtype))
+                return self.transfer(v, live)
+            tasks.append(ExecTask(tr.name, tr.lane, move, deps,
+                                  kind="transfer", priority=prio))
+        for task in self.order:
+            node = node_by[task.name]
+            dev = self.assignments[task.name].device
+            disp = self.dispatchers[dev]
+            sources = []        # per positional dep: task to read, or None
+            deps = []
+            for d in node.deps:
+                moved = self.buffers.transfer_for(d, dev)
+                if moved is not None:
+                    sources.append(moved.name)
+                    deps.append(moved.name)
+                elif d in node_by:
+                    sources.append(d)
+                    deps.append(d)
+                else:
+                    sources.append(None)        # input already home here
+
+            def run(env_, node=node, disp=disp, sources=tuple(sources)):
+                vals = [env[d] if s is None else env_[s]
+                        for d, s in zip(node.deps, sources)]
+                return disp.dispatch(node.kernel, *vals, **node.kwargs)
+            tasks.append(ExecTask(node.name, dev, run, tuple(deps),
+                                  kind="compute",
+                                  priority=self.assignments[node.name].start))
+        return tasks
+
+    def _run_async(self, env) -> None:
+        tracer = ExecutionTrace()
+        self.last_trace = tracer       # pre-installed: failures keep the
+                                       # partial trace of the dying run
+        results = AsyncExecutor(tracer=tracer).run(self._exec_tasks(env))
+        for node in self.program.nodes:
+            env[node.name] = results[node.name]
+
+    def __call__(self, *args, _executor: Optional[str] = None, **named):
+        """Execute the schedule.  Inputs bind positionally (program input
+        order), by name, or fall back to the bindings captured at trace
+        time; shapes must fall in the compiled specs' shape classes.
+        ``_executor`` overrides the compiled back end for this call (the
+        underscore keeps the name out of the input namespace)."""
+        mode = _executor or self.executor
+        if mode not in EXECUTORS:
+            raise ValueError(f"executor must be one of {EXECUTORS}, "
+                             f"got {mode!r}")
+        env = self._bind(args, named)
+        if mode == "async":
+            self._run_async(env)
+        else:
+            self._run_sequential(env)
         outs = tuple(env[o] for o in self.program.outputs)
         return outs[0] if len(outs) == 1 else outs

@@ -126,11 +126,14 @@ class TraceBuilder:
         outs = tuple(n.name for n in self.nodes if n.name not in consumed)
         return Program(tuple(self.inputs), tuple(self.nodes), outs)
 
-    def compile(self, devices=None, policy=None):
+    def compile(self, devices=None, policy=None, executor: str = "sequential",
+                comm=None, transfer=None):
         """Compile the recorded program with the captured arrays pre-bound,
         so the returned ``CompiledProgram`` can be called with no args."""
         return self.program.compile(devices=devices, policy=policy,
-                                    bindings=dict(self.bindings))
+                                    bindings=dict(self.bindings),
+                                    executor=executor, comm=comm,
+                                    transfer=transfer)
 
 
 @contextlib.contextmanager

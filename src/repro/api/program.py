@@ -136,18 +136,24 @@ class Program:
     def to_kernel_tasks(self) -> list[KernelTask]:
         """Lower to the ``core.scheduler`` form: one task per node, deps
         filtered to node names (program inputs are materialised values, not
-        schedulable work)."""
+        schedulable work).  ``out_bytes`` carries the output payload size so
+        a comm-aware schedule can price cross-device edges."""
+        from repro.exec.buffers import value_nbytes
         node_names = {n.name for n in self.nodes}
         return [KernelTask(n.name, n.kernel, dict(n.params),
-                           tuple(d for d in n.deps if d in node_names))
+                           tuple(d for d in n.deps if d in node_names),
+                           out_bytes=float(value_nbytes(n.out_shape,
+                                                        n.out_dtype)))
                 for n in self.nodes]
 
     # -- conveniences (lazy imports avoid package cycles) --------------------
-    def compile(self, devices=None, policy=None, bindings=None):
+    def compile(self, devices=None, policy=None, bindings=None,
+                executor: str = "sequential", comm=None, transfer=None):
         """Schedule + specialise this program; see ``repro.api.compile_``."""
         from repro.api.compile_ import compile_program
         return compile_program(self, devices=devices, policy=policy,
-                               bindings=bindings)
+                               bindings=bindings, executor=executor,
+                               comm=comm, transfer=transfer)
 
     def to_json(self) -> dict:
         from repro.api.export import program_to_json

@@ -9,7 +9,7 @@ DAG dependencies.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Sequence
+from typing import Callable, Optional, Sequence
 
 
 
@@ -19,6 +19,9 @@ class KernelTask:
     kernel: str
     params: dict
     deps: tuple = ()
+    out_bytes: float = 0.0      # payload size of this task's output — what
+                                # a cross-device successor must pull over
+                                # the link (0 disables comm costing)
 
 
 @dataclasses.dataclass
@@ -30,9 +33,21 @@ class Assignment:
 
 def schedule(tasks: Sequence[KernelTask],
              predict: Callable[[KernelTask, str], float],
-             devices: Sequence[str]) -> dict[str, Assignment]:
-    """predict(task, device) -> seconds.  Returns task -> Assignment."""
+             devices: Sequence[str],
+             comm: Optional[Callable[[str, str, float], float]] = None
+             ) -> dict[str, Assignment]:
+    """predict(task, device) -> seconds.  Returns task -> Assignment.
+
+    With ``comm(src_device, dst_device, nbytes) -> seconds`` (e.g.
+    ``repro.exec.CommModel.comm_fn()``) the EFT becomes communication-aware:
+    an edge whose producer ran on a different device delays the consumer's
+    earliest start by the predicted transfer time of the producer's output
+    payload — so the makespan already accounts for the ``Transfer`` tasks
+    ``repro.exec.buffers.plan_buffers`` will materialize, and a placement
+    that looks fast compute-wise loses when it forces the bytes across a
+    slow link."""
     done: dict[str, Assignment] = {}
+    producer = {t.name: t for t in tasks}
     device_free = {d: 0.0 for d in devices}
     remaining = list(tasks)
     while remaining:
@@ -46,8 +61,13 @@ def schedule(tasks: Sequence[KernelTask],
         best = None
         for dev in devices:
             t_pred = predict(task, dev)
-            start = max(device_free[dev],
-                        max((done[d].finish for d in task.deps), default=0.0))
+            start = device_free[dev]
+            for d in task.deps:
+                avail = done[d].finish
+                if comm is not None and done[d].device != dev:
+                    avail += comm(done[d].device, dev,
+                                  producer[d].out_bytes)
+                start = max(start, avail)
             finish = start + t_pred
             if best is None or finish < best[1].finish:
                 best = (dev, Assignment(dev, start, finish))

@@ -1,0 +1,101 @@
+"""Buffer placement table + explicit transfer materialization.
+
+The scheduler decides *where each node runs*; this module derives from
+that *where each value lives* and which values must physically move.  A
+node's output lives on the device that ran it; a program input is placed
+on the device of its earliest-starting consumer.  Every DAG edge whose
+consumer device differs from the value's home device materializes one
+``Transfer`` task — data movement as first-class scheduled work (the
+SDFG/DaCe lesson), deduplicated per (value, destination): a value fanning
+out to two nodes on the same remote device crosses the link once.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+
+def value_nbytes(shape, dtype) -> int:
+    """Payload size of a value from its aval."""
+    return int(np.prod(shape, dtype=np.int64) * np.dtype(dtype).itemsize)
+
+
+@dataclasses.dataclass(frozen=True)
+class Transfer:
+    """One materialized cross-device move of a named value."""
+    value: str                  # value being moved (input or node output)
+    src: str                    # home device
+    dst: str                    # consumer device
+    nbytes: int
+
+    @property
+    def name(self) -> str:
+        return f"xfer:{self.value}:{self.src}->{self.dst}"
+
+    @property
+    def lane(self) -> str:
+        """The link lane that carries this transfer (the executor runs one
+        worker per lane, so copies overlap with both endpoints' compute)."""
+        return f"{self.src}->{self.dst}"
+
+
+@dataclasses.dataclass(frozen=True)
+class BufferTable:
+    """value name -> home device, plus the transfers the plan requires."""
+    placements: dict
+    transfers: tuple
+
+    def device_of(self, value: str) -> str:
+        return self.placements[value]
+
+    def transfer_for(self, value: str, device: str) -> Optional[Transfer]:
+        """The transfer that lands ``value`` on ``device``, if one exists
+        (none means the value is already home there)."""
+        for t in self.transfers:
+            if t.value == value and t.dst == device:
+                return t
+        return None
+
+
+def plan_buffers(program, assignments) -> BufferTable:
+    """Derive the placement table and transfer list for a scheduled program.
+
+    ``assignments`` is the scheduler's node -> Assignment map.  Inputs are
+    placed on their earliest-starting consumer's device (ties broken by
+    node order); an input no node consumes (a passthrough output) stays on
+    the first device seen.  Transfers are emitted for every edge whose
+    consumer runs away from the value's home, one per (value, dst).
+    """
+    placements: dict = {}
+    for node in program.nodes:
+        placements[node.name] = assignments[node.name].device
+
+    avals = {s.name: s.aval for s in program.inputs}
+    for node in program.nodes:
+        avals[node.name] = node.aval
+
+    # inputs: home = device of the earliest consumer
+    for spec in program.inputs:
+        consumers = [n for n in program.nodes if spec.name in n.deps]
+        if consumers:
+            first = min(consumers,
+                        key=lambda n: assignments[n.name].start)
+            placements[spec.name] = assignments[first.name].device
+        elif assignments:
+            placements[spec.name] = next(iter(assignments.values())).device
+
+    transfers: list = []
+    seen: set = set()
+    for node in program.nodes:
+        dst = assignments[node.name].device
+        for dep in node.deps:
+            src = placements[dep]
+            if src == dst or (dep, dst) in seen:
+                continue
+            seen.add((dep, dst))
+            aval = avals[dep]
+            transfers.append(Transfer(dep, src, dst,
+                                      value_nbytes(aval.shape, aval.dtype)))
+    return BufferTable(placements=placements, transfers=tuple(transfers))

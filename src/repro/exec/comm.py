@@ -1,0 +1,97 @@
+"""Bytes -> seconds inter-device transfer cost model.
+
+Transfers are predicted exactly like kernels: each (src, dst) device pair
+is a *pseudo-kernel* in the runtime tuning cache (the ``decode_step``
+precedent from ``serve.continuous``) whose rows are measured copy times
+over a sweep of payload sizes, with ``bytes`` as both the single feature
+and the analytic ``c`` augmentation (the operation count of a copy *is*
+its byte count).  The fitted closed-form model — latency + bandwidth in
+log space — persists next to the kernel models, so a re-compiled program
+on the same fingerprint prices its links without re-measuring, and the
+comm-aware EFT scheduler (``core.scheduler.schedule(..., comm=)``) reads
+predicted transfer seconds from the same cache state execution will.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional, Sequence
+
+import numpy as np
+
+from repro.core.nnc import LinearModel
+from repro.perfdata.measure import time_callable
+from repro.runtime.cache import TuningCache, shape_bucket
+
+TRANSFER_FEATURES = ("bytes",)
+# payload sweep for measure_pair: small enough to stay fast, wide enough
+# (3 decades) that the log-space fit separates latency from bandwidth
+DEFAULT_SIZES = (1 << 12, 1 << 15, 1 << 18, 1 << 21)
+
+
+def transfer_kernel(src: str, dst: str) -> str:
+    """Cache entry name of the (src, dst) pseudo-kernel (doubles as its
+    on-disk file stem, hence no path-hostile characters)."""
+    return f"transfer__{src}__{dst}"
+
+
+class CommModel:
+    """Per-device-pair bytes->seconds predictor backed by a tuning cache."""
+
+    def __init__(self, cache: Optional[TuningCache] = None):
+        self.cache = cache or TuningCache()
+
+    def _entry(self, src: str, dst: str):
+        return self.cache.entry(transfer_kernel(src, dst),
+                                feature_names=list(TRANSFER_FEATURES),
+                                variant_names=["copy"])
+
+    # -- recording -----------------------------------------------------------
+    def record(self, src: str, dst: str, nbytes: int,
+               seconds: float) -> None:
+        """Append one observed transfer (features row is [bytes, c=bytes])."""
+        entry = self._entry(src, dst)
+        entry.add_rows(np.asarray([[float(nbytes), float(nbytes)]]),
+                       [seconds], shape_bucket({"bytes": nbytes}))
+
+    def fit(self, src: str, dst: str) -> None:
+        entry = self._entry(src, dst)
+        entry.fit(model=LinearModel())
+        self.cache.save(entry.kernel)
+
+    def measure_pair(self, src: str, dst: str,
+                     transfer_fn: Callable[[np.ndarray], object],
+                     sizes: Sequence[int] = DEFAULT_SIZES,
+                     min_window: float = 1e-3) -> None:
+        """Measure ``transfer_fn`` (takes the payload buffer) over the size
+        sweep, record the rows, fit, and persist — the black-box protocol
+        kernels use, applied to the link."""
+        for nbytes in sizes:
+            buf = np.zeros(int(nbytes), np.uint8)
+            self.record(src, dst, int(nbytes),
+                        time_callable(lambda: transfer_fn(buf),
+                                      min_window=min_window))
+        self.fit(src, dst)
+
+    # -- prediction ----------------------------------------------------------
+    def has_pair(self, src: str, dst: str) -> bool:
+        return self.cache.has(transfer_kernel(src, dst))
+
+    def predict(self, src: str, dst: str, nbytes: float) -> float:
+        """Predicted seconds to move ``nbytes`` from src to dst; 0 for a
+        same-device 'move'.  A cold/unknown pair raises — a scheduler fed
+        silent zeros would hide every link from the makespan."""
+        if src == dst:
+            return 0.0
+        # guard before _entry(): touching an unmeasured pair would register
+        # an empty cache entry, and has_pair would then misreport it known
+        if not self.has_pair(src, dst):
+            raise ValueError(
+                f"no measured transfer model for {src!r}->{dst!r} — run "
+                "measure_pair (or record+fit) for this device pair first")
+        entry = self._entry(src, dst)
+        row = np.asarray([[float(nbytes), float(nbytes)]])
+        return float(entry.predict(row)[0])
+
+    def comm_fn(self) -> Callable[[str, str, float], float]:
+        """The ``comm(src, dst, nbytes) -> seconds`` callable the EFT
+        scheduler takes."""
+        return self.predict

@@ -1,0 +1,189 @@
+"""Dependency-driven asynchronous multi-device executor.
+
+One worker thread per lane (device or link), each draining a priority
+queue ordered by predicted start time.  A task becomes *ready* the moment
+its last dependency completes — not when its turn arrives in the global
+start-time order — so a slow early task on one device never blocks an
+independent ready task on another, which is exactly the overlap the
+sequential ``run_schedule`` bridge cannot express.  Every task's output is
+a future; dependents read dependency values through the environment
+mapping (resolved futures, so reads never block).
+
+The executor is deliberately generic: it runs ``ExecTask``s, not program
+nodes.  ``repro.api.CompiledProgram`` lowers its scheduled DAG — compute
+nodes on their assigned devices plus the ``buffers.plan_buffers`` transfer
+tasks on their link lanes — into this form; tests drive it directly with
+hand-built graphs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+from collections import deque
+from concurrent.futures import Future
+from typing import Callable, Mapping, Optional, Sequence
+
+from repro.exec.trace import ExecutionTrace
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecTask:
+    """One schedulable unit: runs ``fn(env)`` on lane ``device`` once every
+    dep has completed; ``env[dep]`` is the dep's output."""
+    name: str
+    device: str
+    fn: Callable[[Mapping], object]
+    deps: tuple = ()
+    kind: str = "compute"           # "compute" | "transfer" (trace category)
+    priority: float = 0.0           # predicted start; orders a lane's queue
+
+
+class _Env:
+    """Read-only view over completed task futures (deps are guaranteed
+    resolved before a task fires, so ``result()`` never blocks)."""
+
+    def __init__(self, futures: dict):
+        self._futures = futures
+
+    def __getitem__(self, name: str):
+        return self._futures[name].result()
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._futures
+
+
+_SENTINEL_PRIORITY = float("inf")
+
+
+class AsyncExecutor:
+    """Runs a task graph across per-lane worker threads."""
+
+    def __init__(self, tracer: Optional[ExecutionTrace] = None,
+                 clock: Callable[[], float] = time.perf_counter):
+        self.tracer = tracer
+        self.clock = clock
+
+    # -- validation ----------------------------------------------------------
+    @staticmethod
+    def _validate(tasks: Sequence[ExecTask]) -> None:
+        names = set()
+        for t in tasks:
+            if t.name in names:
+                raise ValueError(f"duplicate task name {t.name!r}")
+            names.add(t.name)
+        for t in tasks:
+            for d in t.deps:
+                if d not in names:
+                    raise ValueError(
+                        f"task {t.name!r} depends on unknown task {d!r}")
+        # Kahn's algorithm: anything left over sits on a cycle
+        pending = {t.name: len(t.deps) for t in tasks}
+        succ: dict = {t.name: [] for t in tasks}
+        for t in tasks:
+            for d in t.deps:
+                succ[d].append(t.name)
+        ready = deque(n for n, c in pending.items() if c == 0)
+        seen = 0
+        while ready:
+            n = ready.popleft()
+            seen += 1
+            for s in succ[n]:
+                pending[s] -= 1
+                if pending[s] == 0:
+                    ready.append(s)
+        if seen != len(tasks):
+            stuck = sorted(n for n, c in pending.items() if c > 0)
+            raise ValueError(f"dependency cycle among tasks {stuck}")
+
+    # -- execution -----------------------------------------------------------
+    def run(self, tasks: Sequence[ExecTask]) -> dict:
+        """Execute the graph; returns name -> output.  The first task
+        exception aborts the run (not-yet-started tasks are skipped) and
+        re-raises in the caller."""
+        tasks = list(tasks)
+        if not tasks:
+            return {}
+        self._validate(tasks)
+
+        by_name = {t.name: t for t in tasks}
+        futures: dict = {t.name: Future() for t in tasks}
+        env = _Env(futures)
+        succ: dict = {t.name: [] for t in tasks}
+        for t in tasks:
+            for d in t.deps:
+                succ[d].append(t.name)
+
+        lock = threading.Lock()
+        done = threading.Event()
+        abort = threading.Event()
+        state = {"pending": {t.name: len(t.deps) for t in tasks},
+                 "n_done": 0, "error": None, "seq": 0}
+        lanes = sorted({t.device for t in tasks})
+        queues: dict = {lane: queue.PriorityQueue() for lane in lanes}
+
+        def enqueue(task: ExecTask) -> None:
+            with lock:
+                state["seq"] += 1
+                seq = state["seq"]
+            queues[task.device].put((task.priority, seq, task))
+
+        def complete(task: ExecTask, value) -> None:
+            futures[task.name].set_result(value)
+            ready = []
+            with lock:
+                state["n_done"] += 1
+                for s in succ[task.name]:
+                    state["pending"][s] -= 1
+                    if state["pending"][s] == 0:
+                        ready.append(by_name[s])
+                finished = state["n_done"] == len(tasks)
+            for r in sorted(ready, key=lambda t: t.priority):
+                enqueue(r)
+            if finished:
+                done.set()
+
+        def fail(task: ExecTask, exc: BaseException) -> None:
+            futures[task.name].set_exception(exc)
+            with lock:
+                if state["error"] is None:
+                    state["error"] = exc
+            abort.set()
+            done.set()
+
+        def worker(lane: str) -> None:
+            q = queues[lane]
+            while True:
+                _, _, task = q.get()
+                if task is None:
+                    return
+                if abort.is_set():
+                    continue
+                t0 = self.clock()
+                try:
+                    value = task.fn(env)
+                except BaseException as exc:  # noqa: BLE001 — re-raised in run()
+                    fail(task, exc)
+                    continue
+                t1 = self.clock()
+                if self.tracer is not None:
+                    self.tracer.record(task.name, task.kind, lane, t0, t1)
+                complete(task, value)
+
+        workers = [threading.Thread(target=worker, args=(lane,),
+                                    name=f"exec-{lane}", daemon=True)
+                   for lane in lanes]
+        for w in workers:
+            w.start()
+        for t in sorted(tasks, key=lambda t: t.priority):
+            if not t.deps:
+                enqueue(t)
+        done.wait()
+        for lane in lanes:
+            queues[lane].put((_SENTINEL_PRIORITY, 0, None))
+        for w in workers:
+            w.join()
+        if state["error"] is not None:
+            raise state["error"]
+        return {name: futures[name].result() for name in futures}

@@ -1,0 +1,105 @@
+"""Per-task begin/end/device execution trace.
+
+Every executor run (async *and* the sequential bridge) records one
+``TraceEvent`` per task — compute nodes and explicit transfer tasks alike —
+with wall-clock begin/end and the lane that ran it.  The trace exports to
+two formats: Chrome ``trace_event`` JSON (open in ``chrome://tracing`` or
+Perfetto; one row per device/link lane, so compute/transfer overlap is
+visible at a glance) and a Gantt CSV shaped like the predicted-schedule
+CSV ``repro.api.export.gantt_csv`` emits (task/device/start/finish line
+up; column 2 is the event *kind* here vs the kernel name there), so
+predicted and actual timelines sit side by side.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import threading
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceEvent:
+    name: str
+    kind: str                   # "compute" | "transfer"
+    device: str                 # device name or "src->dst" link lane
+    begin_s: float
+    end_s: float
+
+    @property
+    def dur_s(self) -> float:
+        return self.end_s - self.begin_s
+
+
+class ExecutionTrace:
+    """Thread-safe accumulator of ``TraceEvent``s for one execution."""
+
+    def __init__(self):
+        self.events: list = []
+        self._lock = threading.Lock()
+
+    def record(self, name: str, kind: str, device: str,
+               begin_s: float, end_s: float) -> None:
+        with self._lock:
+            self.events.append(TraceEvent(name, kind, device,
+                                          begin_s, end_s))
+
+    # -- summaries -----------------------------------------------------------
+    @property
+    def t0(self) -> float:
+        return min(e.begin_s for e in self.events) if self.events else 0.0
+
+    @property
+    def wall_s(self) -> float:
+        """End-to-end wall time spanned by the recorded events."""
+        if not self.events:
+            return 0.0
+        return max(e.end_s for e in self.events) - self.t0
+
+    def devices(self) -> list:
+        return sorted({e.device for e in self.events})
+
+    def busy_s(self, device: str) -> float:
+        """Total busy seconds of one lane (no overlap within a lane: each
+        worker runs one task at a time)."""
+        return sum(e.dur_s for e in self.events if e.device == device)
+
+    def by_start(self) -> list:
+        return sorted(self.events, key=lambda e: (e.begin_s, e.name))
+
+    # -- exports -------------------------------------------------------------
+    def to_chrome(self) -> dict:
+        """Chrome ``trace_event`` document: one "X" (complete) event per
+        task, one tid per lane (named via metadata events), timestamps in
+        microseconds relative to the first begin."""
+        t0 = self.t0
+        lanes = {d: i for i, d in enumerate(self.devices())}
+        events = [{"name": d, "ph": "M", "pid": 0, "tid": tid,
+                   "cat": "__metadata", "args": {"name": d}}
+                  for d, tid in lanes.items()]
+        for m in events:
+            m["name"] = "thread_name"
+        for e in self.by_start():
+            events.append({"name": e.name, "cat": e.kind, "ph": "X",
+                           "pid": 0, "tid": lanes[e.device],
+                           "ts": (e.begin_s - t0) * 1e6,
+                           "dur": e.dur_s * 1e6})
+        return {"traceEvents": events, "displayTimeUnit": "ms"}
+
+    def to_gantt_csv(self) -> str:
+        """Measured-timeline CSV (task,kind,device,start_s,finish_s) —
+        aligned with the predicted-schedule Gantt except that column 2 is
+        the event kind, not the kernel name."""
+        t0 = self.t0
+        lines = ["task,kind,device,start_s,finish_s"]
+        for e in self.by_start():
+            lines.append(f"{e.name},{e.kind},{e.device},"
+                         f"{e.begin_s - t0:.9f},{e.end_s - t0:.9f}")
+        return "\n".join(lines) + "\n"
+
+    def save_chrome(self, path: str) -> None:
+        with open(path, "w") as f:
+            json.dump(self.to_chrome(), f, indent=1)
+
+    def save_gantt_csv(self, path: str) -> None:
+        with open(path, "w") as f:
+            f.write(self.to_gantt_csv())

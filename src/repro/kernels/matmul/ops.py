@@ -15,7 +15,10 @@ def abstract_params(a, b) -> dict:
     """Predictor params from avals — shape-only, safe to call without data
     (the ``repro.api`` tracer derives NN+C features through this hook)."""
     m, k = a.shape
-    _, n = b.shape
+    kb, n = b.shape
+    if int(kb) != int(k):
+        raise ValueError(f"matmul contraction dims disagree: "
+                         f"a is {tuple(a.shape)}, b is {tuple(b.shape)}")
     return {"m": int(m), "n": int(n), "k": int(k)}
 
 

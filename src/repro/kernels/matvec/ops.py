@@ -14,6 +14,9 @@ from repro.kernels.matvec import ref as _ref
 def abstract_params(a, x) -> dict:
     """Predictor params from avals (shape-only; see kernels/matmul/ops.py)."""
     m, k = a.shape
+    if x.shape and int(x.shape[0]) != int(k):
+        raise ValueError(f"matvec contraction dims disagree: "
+                         f"a is {tuple(a.shape)}, x is {tuple(x.shape)}")
     return {"m": int(m), "k": int(k)}
 
 

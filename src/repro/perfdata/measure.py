@@ -14,8 +14,17 @@ import numpy as np
 from numpy.lib.stride_tricks import sliding_window_view
 
 
-def _time(fn: Callable[[], object], min_window: float = 5e-3,
-          max_reps: int = 200) -> float:
+def time_callable(fn: Callable[[], object], min_window: float = 5e-3,
+                  max_reps: int = 200) -> float:
+    """Wall-clock seconds per call of ``fn`` — the repo-wide black-box
+    timing protocol: one warmup call, then adaptive repetition until the
+    measured window reaches ``min_window`` (amortizes timer resolution for
+    microsecond kernels without penalizing millisecond ones).
+
+    This is the public timing entry point; the runtime dispatcher's cold
+    path, the exec layer's link measurement, and the benchmarks all share
+    it so every measured row in the tuning cache follows one protocol.
+    """
     fn()                                    # warmup
     reps = 1
     while True:
@@ -26,6 +35,10 @@ def _time(fn: Callable[[], object], min_window: float = 5e-3,
         if dt >= min_window or reps >= max_reps:
             return dt / reps
         reps = min(max_reps, max(reps * 2, int(reps * min_window / max(dt, 1e-9))))
+
+
+# retired private alias (kept one release so out-of-tree callers migrate)
+_time = time_callable
 
 
 # --- variants ---------------------------------------------------------------

@@ -8,7 +8,8 @@ them *inside* the dispatch path: a unified variant registry
 (``cache``), predict-best dispatch with measured cold-start
 (``dispatch``), and online refit from actual wall times (``online``).
 """
-from repro.runtime.cache import (CacheEntry, TuningCache, shape_bucket,
+from repro.runtime.cache import (CacheEntry, TuningCache, bucket_dim,
+                                 shape_bucket, shape_class,
                                  TRAIN_BUDGET_ROWS)
 from repro.runtime.dispatch import (DispatchPolicy, Dispatcher, Selection,
                                     default_dispatcher, dispatch)

@@ -41,18 +41,27 @@ DEFAULT_ROOT = os.path.join("results", "tunecache")
 TRAIN_BUDGET_ROWS = 250
 
 
+def bucket_dim(v) -> float:
+    """The single-dimension collapse rule behind every shape bucket in the
+    repo: small values (ranks, strides, windows) stay exact, larger ones
+    collapse to their log2 bucket."""
+    v = float(v)
+    return v if v <= 16 else 16.0 + round(math.log2(v))
+
+
 def shape_bucket(params: dict) -> tuple:
-    """Canonical shape bucket: small ints (ranks, strides, windows) stay
-    exact, larger dims collapse to their log2 bucket.  Coverage of a bucket
-    means "we measured a shape like this here"."""
-    items = []
-    for k in sorted(params):
-        v = float(params[k])
-        if v <= 16:
-            items.append((k, v))
-        else:
-            items.append((k, 16.0 + round(math.log2(v))))
-    return tuple(items)
+    """Canonical shape bucket: ``bucket_dim`` per param.  Coverage of a
+    bucket means "we measured a shape like this here"."""
+    return tuple((k, bucket_dim(params[k])) for k in sorted(params))
+
+
+def shape_class(shape) -> tuple:
+    """Whole-shape bucket — ``bucket_dim`` per axis.  This is the rule
+    ``repro.api.CompiledProgram`` uses to reuse a compiled schedule across
+    minor shape jitter; it lives here, next to ``shape_bucket``, so the
+    compile-time class and the cache's measured-coverage buckets can never
+    drift apart."""
+    return tuple(bucket_dim(d) for d in shape)
 
 
 @dataclasses.dataclass

@@ -3,7 +3,7 @@
 ``dispatch(kernel, *args)`` ranks every registered variant with the cached
 NN+C model and executes only the predicted-best.  On a cold cache (no
 fitted model) it falls back to *measuring* a bounded candidate set —
-reusing the black-box timing protocol of ``perfdata.measure._time`` —
+reusing the black-box timing protocol of ``perfdata.measure.time_callable`` —
 records the rows, and persists them; once enough rows accumulate the
 lightweight model is fitted and subsequent dispatches are pure prediction
 (<75-weight numpy forward, microseconds).  On an unseen shape bucket the
@@ -25,7 +25,7 @@ from typing import Optional
 import jax
 import numpy as np
 
-from repro.perfdata.measure import _time
+from repro.perfdata.measure import time_callable
 from repro.runtime.cache import TuningCache, shape_bucket
 from repro.runtime.online import OnlineConfig, OnlineRefiner
 from repro.runtime.registry import KernelRegistry, default_registry
@@ -233,7 +233,7 @@ class Dispatcher:
         times = []
         for i in candidates:
             v = rk.variants[i]
-            times.append(_time(
+            times.append(time_callable(
                 lambda: jax.block_until_ready(v.call(args, params)),
                 min_window=self.policy.min_window))
         entry.add_rows(rows[candidates], times, bucket)

@@ -6,8 +6,23 @@ sustained FLOP rate and fitted with the closed-form linear baseline —
 which gives the DAG scheduler honest *absolute-time* predictions without
 needing two real machines in CI.  Everything downstream (scheduling,
 compile, execution) is the production path.
+
+Two extensions serve the ``repro.exec`` layer:
+
+- ``SimDispatcher`` (``fake_matmul_device(..., simulate_time=True)``)
+  additionally *sleeps* the predicted kernel time before dispatching, so
+  node durations on CPU match the device's advertised speed and executor
+  overlap is demonstrable (and testable) deterministically.
+- ``SimLink`` models an inter-device interconnect: transfers sleep
+  ``latency + nbytes/bandwidth``.  Its ``transfer`` method plugs into
+  ``CompiledProgram(transfer=...)``; ``measure_into`` runs the link
+  through ``CommModel.measure_pair`` so the *measured* pseudo-kernel path
+  is exercised end-to-end, not short-circuited with analytic numbers.
 """
 from __future__ import annotations
+
+import dataclasses
+import time
 
 import numpy as np
 
@@ -17,9 +32,28 @@ from repro.runtime.dispatch import Dispatcher
 from repro.runtime.fingerprint import Fingerprint
 
 
+class SimDispatcher(Dispatcher):
+    """Dispatcher that sleeps each kernel's predicted time before running
+    it — a device that is exactly as fast as its tuning cache claims."""
+
+    def __init__(self, *args, time_scale: float = 1.0, **kwargs):
+        super().__init__(*args, **kwargs)
+        self.time_scale = time_scale
+
+    def dispatch(self, kernel: str, *args, **kwargs):
+        params = self.registry.get(kernel).params_of(*args, **kwargs)
+        time.sleep(self.predict_time(kernel, params) * self.time_scale)
+        return super().dispatch(kernel, *args, **kwargs)
+
+
 def fake_matmul_device(root: str, name: str, flops_per_s: float,
-                       registry, seed: int = 0) -> Dispatcher:
-    """A matmul-tuned dispatcher running at ``flops_per_s`` sustained."""
+                       registry, seed: int = 0,
+                       simulate_time: bool = False,
+                       time_scale: float = 1.0,
+                       policy=None) -> Dispatcher:
+    """A matmul-tuned dispatcher running at ``flops_per_s`` sustained.
+    With ``simulate_time`` the returned dispatcher also *takes* the
+    predicted time per dispatch (see ``SimDispatcher``)."""
     fp = Fingerprint("sim", name, 1, 1, ("float32",))
     cache = TuningCache(root=root, fingerprint=fp)
     rk = registry.get("matmul")
@@ -33,4 +67,36 @@ def fake_matmul_device(root: str, name: str, flops_per_s: float,
         entry.add_rows(rows, rows[:, -1] / flops_per_s, shape_bucket(p))
     entry.fit(model=LinearModel())
     cache.save()
-    return Dispatcher(registry=registry, cache=cache)
+    if simulate_time:
+        return SimDispatcher(registry=registry, cache=cache, policy=policy,
+                             time_scale=time_scale)
+    return Dispatcher(registry=registry, cache=cache, policy=policy)
+
+
+@dataclasses.dataclass(frozen=True)
+class SimLink:
+    """Deterministic simulated interconnect: moving ``n`` bytes takes
+    ``latency_s + n / bytes_per_s`` of wall time."""
+    latency_s: float = 1e-3
+    bytes_per_s: float = 1e9
+    time_scale: float = 1.0
+
+    def seconds(self, nbytes: float) -> float:
+        return (self.latency_s + float(nbytes) / self.bytes_per_s) \
+            * self.time_scale
+
+    def transfer(self, value, tr):
+        """``CompiledProgram(transfer=link.transfer)`` hook: sleep the
+        link time for the payload, hand the value through untouched (the
+        hosts share memory — simulation must never perturb numerics)."""
+        time.sleep(self.seconds(tr.nbytes))
+        return value
+
+    def measure_into(self, comm, pairs, **kw) -> None:
+        """Measure this link into a ``repro.exec.CommModel`` for every
+        (src, dst) pair — the production measurement protocol run against
+        the simulated wire, so predictions come from fitted rows."""
+        for src, dst in pairs:
+            comm.measure_pair(
+                src, dst, lambda buf: time.sleep(self.seconds(buf.nbytes)),
+                **kw)

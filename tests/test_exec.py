@@ -1,0 +1,457 @@
+"""repro.exec: async executor correctness (out-of-order firing, error
+propagation, determinism), transfer planning + comm-aware EFT accounting
+on a two-simdev diamond, the bit-exact async-vs-sequential acceptance, and
+the bucketed CompiledProgram shape specs."""
+import threading
+import time
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import Program, ops, trace
+from repro.core.scheduler import schedule
+from repro.exec import (AsyncExecutor, CommModel, ExecTask, ExecutionTrace,
+                        plan_buffers, transfer_kernel, value_nbytes)
+from repro.perfdata.measure import time_callable
+from repro.runtime import (Dispatcher, DispatchPolicy, Fingerprint,
+                           TuningCache, bucket_dim, default_registry,
+                           shape_bucket, shape_class)
+from repro.runtime.simdev import SimLink, fake_matmul_device
+
+N = 160          # square matmul size: ~8ms/node on the 1e9 F/s sim device
+
+
+# --------------------------------------------------------------------------
+# fixtures: two simulated devices, a simulated link, a diamond program
+# --------------------------------------------------------------------------
+
+def _devices(tmp_path, simulate_time=False, time_scale=1.0):
+    reg = default_registry(include=["matmul"])
+    return reg, {
+        "d0": fake_matmul_device(str(tmp_path / "devs"), "d0", 1.0e9, reg,
+                                 simulate_time=simulate_time,
+                                 time_scale=time_scale),
+        "d1": fake_matmul_device(str(tmp_path / "devs"), "d1", 0.9e9, reg,
+                                 simulate_time=simulate_time,
+                                 time_scale=time_scale),
+    }
+
+
+def _comm(tmp_path, link):
+    comm = CommModel(TuningCache(root=str(tmp_path / "comm")))
+    link.measure_into(comm, [("d0", "d1"), ("d1", "d0")])
+    return comm
+
+
+def _diamond(reg, width=2):
+    """root -> ``width`` independent branches -> join tree; outputs = every
+    node, so tests can compare per-node results across executors."""
+    rng = np.random.RandomState(0)
+    arrs = [jnp.asarray(rng.rand(N, N), jnp.float32)
+            for _ in range(2 + width)]
+    with trace(registry=reg) as tb:
+        root = ops.matmul(arrs[0], arrs[1])
+        branches = [ops.matmul(root, w) for w in arrs[2:]]
+        join = branches[0]
+        for b in branches[1:]:
+            join = ops.matmul(join, b)
+    prog = tb.program
+    return Program(prog.inputs, prog.nodes,
+                   tuple(n.name for n in prog.nodes)), dict(tb.bindings)
+
+
+# --------------------------------------------------------------------------
+# AsyncExecutor: the generic engine, driven directly
+# --------------------------------------------------------------------------
+
+def test_out_of_start_order_completion():
+    """A slow early task must not block an independent ready task on
+    another device — the exact failure mode of the sequential bridge."""
+    tracer = ExecutionTrace()
+    order = []
+
+    def slow(env):
+        time.sleep(0.15)
+        order.append("slow")
+        return "slow"
+
+    def fast(env):
+        time.sleep(0.01)
+        order.append("fast")
+        return "fast"
+
+    def after_fast(env):
+        order.append("after:" + env["fast"])
+        return None
+
+    tasks = [ExecTask("slow", "d0", slow, priority=0.0),
+             ExecTask("fast", "d1", fast, priority=1.0),
+             ExecTask("after", "d1", after_fast, deps=("fast",),
+                      priority=2.0)]
+    AsyncExecutor(tracer=tracer).run(tasks)
+    # fast AND its dependent completed while slow (earlier start) still ran
+    assert order == ["fast", "after:fast", "slow"]
+    ev = {e.name: e for e in tracer.events}
+    assert ev["after"].end_s < ev["slow"].end_s
+    assert ev["slow"].device == "d0" and ev["fast"].device == "d1"
+
+
+def test_executor_deps_fire_and_env_resolves():
+    seen = {}
+
+    def make(name, deps):
+        def fn(env, name=name, deps=deps):
+            seen[name] = [env[d] for d in deps]
+            return name
+        return ExecTask(name, f"dev{hash(name) % 3}", fn, tuple(deps))
+
+    tasks = [make("a", ()), make("b", ("a",)), make("c", ("a",)),
+             make("d", ("b", "c"))]
+    out = AsyncExecutor().run(tasks)
+    assert out == {"a": "a", "b": "b", "c": "c", "d": "d"}
+    assert seen["d"] == ["b", "c"]
+
+
+def test_executor_rejects_cycles_and_unknown_deps():
+    ok = lambda env: None
+    with pytest.raises(ValueError, match="cycle"):
+        AsyncExecutor().run([ExecTask("a", "d", ok, deps=("b",)),
+                             ExecTask("b", "d", ok, deps=("a",))])
+    with pytest.raises(ValueError, match="unknown task"):
+        AsyncExecutor().run([ExecTask("a", "d", ok, deps=("ghost",))])
+    with pytest.raises(ValueError, match="duplicate"):
+        AsyncExecutor().run([ExecTask("a", "d", ok),
+                             ExecTask("a", "d", ok)])
+
+
+def test_executor_error_propagates_and_shuts_down():
+    def boom(env):
+        raise RuntimeError("kernel exploded")
+
+    ran = []
+    tasks = [ExecTask("boom", "d0", boom),
+             ExecTask("never", "d0", lambda env: ran.append(1),
+                      deps=("boom",))]
+    before = threading.active_count()
+    with pytest.raises(RuntimeError, match="kernel exploded"):
+        AsyncExecutor().run(tasks)
+    assert not ran                       # dependent never fired
+    deadline = time.time() + 5.0         # workers joined, no thread leak
+    while threading.active_count() > before and time.time() < deadline:
+        time.sleep(0.01)
+    assert threading.active_count() <= before
+
+
+# --------------------------------------------------------------------------
+# transfer planning + comm-aware EFT on the two-simdev diamond
+# --------------------------------------------------------------------------
+
+def test_transfer_insertion_and_makespan_accounting(tmp_path):
+    """Acceptance: cross-device edges on the diamond materialize Transfer
+    tasks, and the comm-aware EFT's predicted makespan accounts for them
+    (every crossing edge delays its consumer by the predicted transfer)."""
+    reg, devices = _devices(tmp_path)
+    link = SimLink(latency_s=1e-3, bytes_per_s=1e9)
+    comm = _comm(tmp_path, link)
+    prog, bindings = _diamond(reg)
+
+    compiled = prog.compile(devices=devices, bindings=bindings, comm=comm)
+    a = compiled.assignments
+    branches = ["matmul_1", "matmul_2"]
+    assert {a[b].device for b in branches} == {"d0", "d1"}, \
+        "EFT should spread the independent branches across both devices"
+
+    # the planned transfers are exactly the device-crossing edges
+    node_dev = {n.name: a[n.name].device for n in prog.nodes}
+    spec_dev = dict(node_dev)
+    for s in prog.inputs:       # inputs live with their earliest consumer
+        spec_dev[s.name] = compiled.buffers.device_of(s.name)
+    expected = {(d, node_dev[n.name]) for n in prog.nodes for d in n.deps
+                if spec_dev[d] != node_dev[n.name]}
+    assert {(t.value, t.dst) for t in compiled.transfers} == expected
+    assert len(compiled.transfers) >= 2  # root->far branch, branch->join
+
+    # makespan accounting: each crossing edge delays the consumer start by
+    # at least the predicted transfer seconds of the producer's payload
+    tasks = {t.name: t for t in prog.to_kernel_tasks()}
+    for n in prog.nodes:
+        for d in n.deps:
+            if d not in tasks or a[d].device == a[n.name].device:
+                continue
+            lag = comm.predict(a[d].device, a[n.name].device,
+                               tasks[d].out_bytes)
+            assert a[n.name].start >= a[d].finish + lag - 1e-12
+
+    # and pricing the links can only push the makespan out
+    predict = lambda t, dev: devices[dev].predict_time(t.kernel, t.params)
+    free = schedule(prog.to_kernel_tasks(), predict, list(devices))
+    from repro.core.scheduler import makespan
+    assert compiled.makespan >= makespan(free) - 1e-12
+
+
+def test_value_nbytes_and_transfer_payloads(tmp_path):
+    reg, devices = _devices(tmp_path)
+    comm = _comm(tmp_path, SimLink())
+    prog, bindings = _diamond(reg)
+    compiled = prog.compile(devices=devices, bindings=bindings, comm=comm)
+    assert value_nbytes((N, N), "float32") == N * N * 4
+    for t in compiled.transfers:
+        assert t.nbytes == N * N * 4
+        assert t.lane == f"{t.src}->{t.dst}"
+
+
+def test_plan_buffers_places_inputs_with_first_consumer(tmp_path):
+    reg, devices = _devices(tmp_path)
+    prog, bindings = _diamond(reg)
+    compiled = prog.compile(devices=devices, bindings=bindings)
+    table = plan_buffers(prog, compiled.assignments)
+    for node in prog.nodes:
+        assert table.device_of(node.name) == compiled.device_of(node.name)
+    for spec in prog.inputs:
+        consumers = [n for n in prog.nodes if spec.name in n.deps]
+        first = min(consumers,
+                    key=lambda n: compiled.assignments[n.name].start)
+        assert table.device_of(spec.name) == compiled.device_of(first.name)
+
+
+# --------------------------------------------------------------------------
+# comm model: measured pseudo-kernels persist and reload
+# --------------------------------------------------------------------------
+
+def test_comm_model_persists_as_pseudo_kernel(tmp_path):
+    link = SimLink(latency_s=2e-3, bytes_per_s=1e9)
+    comm = CommModel(TuningCache(root=str(tmp_path / "comm")))
+    link.measure_into(comm, [("a", "b")])
+    assert comm.has_pair("a", "b")
+    assert comm.predict("a", "a", 1 << 20) == 0.0
+    p = comm.predict("a", "b", 1 << 20)
+    true = link.seconds(1 << 20)
+    assert 0.2 * true < p < 5.0 * true   # right magnitude from 4 rows
+
+    # a fresh model over the same cache root predicts WITHOUT re-measuring
+    reloaded = CommModel(TuningCache(root=str(tmp_path / "comm")))
+    assert reloaded.predict("a", "b", 1 << 20) == pytest.approx(p)
+    # an unmeasured pair refuses to guess (cold-cache contract), and the
+    # refusal must not register a phantom entry that flips has_pair
+    with pytest.raises(ValueError, match="no measured transfer model"):
+        reloaded.predict("b", "a", 1 << 20)
+    assert not reloaded.has_pair("b", "a")
+    # the entry really is a pseudo-kernel in the shared cache layout
+    assert transfer_kernel("a", "b") in reloaded.cache.kernels()
+
+
+# --------------------------------------------------------------------------
+# CompiledProgram: async vs sequential — determinism and acceptance
+# --------------------------------------------------------------------------
+
+def _acceptance_setup(tmp_path, time_scale):
+    reg, devices = _devices(tmp_path, simulate_time=True,
+                            time_scale=time_scale)
+    link = SimLink(latency_s=5e-4, bytes_per_s=2e9)
+    comm = _comm(tmp_path, link)
+    prog, bindings = _diamond(reg, width=4)
+    compiled = prog.compile(devices=devices, bindings=bindings,
+                            executor="async", comm=comm,
+                            transfer=link.transfer)
+    compiled(_executor="sequential")          # jit warmup outside the clocks
+    return compiled
+
+
+def test_async_overlaps_and_matches_bitwise(tmp_path):
+    """Acceptance (deterministic half): async per-node outputs match the
+    sequential reference exactly, every planned transfer executed on its
+    link lane, and the trace shows *structural* overlap — compute events
+    on the two devices running at the same time, which the sequential
+    bridge cannot produce.  (The wall-clock margin lives in the slow tier:
+    it is inherently load-sensitive.)"""
+    compiled = _acceptance_setup(tmp_path, time_scale=1.0)
+    seq = compiled(_executor="sequential")
+    asy = compiled()                          # compiled executor == async
+
+    for s, a in zip(seq, asy):                # bit-for-bit per node
+        assert np.array_equal(np.asarray(s), np.asarray(a))
+
+    tr = compiled.last_trace
+    assert {e.name for e in tr.events if e.kind == "transfer"} \
+        == {t.name for t in compiled.transfers}
+    lanes = tr.devices()
+    assert "d0" in lanes and "d1" in lanes and any("->" in x for x in lanes)
+    # structural overlap: some pair of compute events on different devices
+    # intersects in time (simulated sleeps make the branches long enough
+    # that this holds however the OS schedules the workers)
+    comp = [e for e in tr.events if e.kind == "compute"]
+    assert any(a.device != b.device
+               and a.begin_s < b.end_s and b.begin_s < a.end_s
+               for i, a in enumerate(comp) for b in comp[i + 1:]), \
+        "no two compute events overlapped across devices"
+
+
+@pytest.mark.slow
+def test_async_wall_clock_beats_sequential(tmp_path):
+    """Acceptance (timing half): the async executor's wall-clock is
+    measurably below the sequential bridge's.  time_scale amplifies the
+    simulated compute so node durations dwarf executor bookkeeping, and
+    width=4 makes the win structural (critical path 5 of 8 nodes ~0.65x);
+    still load-sensitive, hence the slow (non-blocking) tier."""
+    compiled = _acceptance_setup(tmp_path, time_scale=6.0)
+
+    def best_of(n, fn):
+        # best-of-n: the simulated sleeps are hard floors (seq ~8 nodes,
+        # async ~5-node critical path), so the minimum wall is the
+        # load-insensitive estimate of each back end's true cost
+        walls = []
+        for _ in range(n):
+            t0 = time.perf_counter()
+            fn()
+            walls.append(time.perf_counter() - t0)
+        return min(walls)
+
+    seq_wall = best_of(3, lambda: compiled(_executor="sequential"))
+    async_wall = best_of(3, lambda: compiled())
+    assert async_wall < 0.85 * seq_wall, \
+        f"no overlap win: async {async_wall:.3f}s vs seq {seq_wall:.3f}s"
+
+
+def test_async_determinism_under_fixed_tunecache(tmp_path):
+    """Same persisted caches -> same schedule, same transfers, and
+    bit-identical async outputs across fresh dispatcher processes.  The
+    confidence gate is pinned off: on an uncovered shape bucket it would
+    *measure* the top-2 variants, and measurement noise choosing different
+    winners across processes is working as intended, not indeterminism."""
+    policy = DispatchPolicy(confidence_gate=False)
+    reg = default_registry(include=["matmul"])
+    first = {n: fake_matmul_device(str(tmp_path / "devs"), n, s, reg,
+                                   policy=policy)
+             for n, s in [("d0", 1.0e9), ("d1", 0.9e9)]}
+    comm = _comm(tmp_path, SimLink())
+    prog, bindings = _diamond(reg)
+    c1 = prog.compile(devices=first, bindings=bindings, executor="async",
+                      comm=comm)
+    out1 = c1()
+
+    def reload(name):
+        fp = Fingerprint("sim", name, 1, 1, ("float32",))
+        return Dispatcher(registry=reg, policy=policy, cache=TuningCache(
+            root=str(tmp_path / "devs"), fingerprint=fp))
+
+    second = {"d0": reload("d0"), "d1": reload("d1")}
+    comm2 = CommModel(TuningCache(root=str(tmp_path / "comm")))
+    c2 = prog.compile(devices=second, bindings=bindings, executor="async",
+                      comm=comm2)
+    out2 = c2()
+    assert {k: (v.device, v.start, v.finish)
+            for k, v in c1.assignments.items()} \
+        == {k: (v.device, v.start, v.finish)
+            for k, v in c2.assignments.items()}
+    assert c1.transfers == c2.transfers
+    for a, b in zip(out1, out2):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+    # and re-running the same compiled program is stable too
+    out3 = c2()
+    for a, b in zip(out2, out3):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_compile_rejects_unknown_executor(tmp_path):
+    reg, devices = _devices(tmp_path)
+    prog, bindings = _diamond(reg)
+    with pytest.raises(ValueError, match="executor must be one of"):
+        prog.compile(devices=devices, bindings=bindings, executor="warp")
+    compiled = prog.compile(devices=devices, bindings=bindings)
+    with pytest.raises(ValueError, match="executor must be one of"):
+        compiled(_executor="warp")
+
+
+# --------------------------------------------------------------------------
+# execution trace exports
+# --------------------------------------------------------------------------
+
+def test_trace_chrome_and_gantt_exports(tmp_path):
+    tr = ExecutionTrace()
+    tr.record("a", "compute", "d0", 10.0, 10.5)
+    tr.record("x", "transfer", "d0->d1", 10.5, 10.6)
+    tr.record("b", "compute", "d1", 10.6, 11.0)
+    assert tr.wall_s == pytest.approx(1.0)
+    assert tr.busy_s("d0") == pytest.approx(0.5)
+    assert tr.devices() == ["d0", "d0->d1", "d1"]
+
+    doc = tr.to_chrome()
+    xs = [e for e in doc["traceEvents"] if e["ph"] == "X"]
+    metas = [e for e in doc["traceEvents"] if e["ph"] == "M"]
+    assert len(xs) == 3 and len(metas) == 3      # one lane name per lane
+    first = next(e for e in xs if e["name"] == "a")
+    assert first["ts"] == 0.0 and first["dur"] == pytest.approx(5e5)
+    assert {e["cat"] for e in xs} == {"compute", "transfer"}
+
+    csv = tr.to_gantt_csv()
+    lines = csv.strip().splitlines()
+    assert lines[0] == "task,kind,device,start_s,finish_s"
+    assert len(lines) == 4 and lines[1].startswith("a,compute,d0,0.0")
+
+    import json
+    path = str(tmp_path / "trace.json")
+    tr.save_chrome(path)
+    assert json.load(open(path))["displayTimeUnit"] == "ms"
+
+
+# --------------------------------------------------------------------------
+# satellites: bucketed shape specs + public timing API
+# --------------------------------------------------------------------------
+
+def test_shape_class_agrees_with_cache_buckets():
+    # one collapse rule, two views: per-param buckets and whole shapes
+    assert shape_class((100, 64)) == (bucket_dim(100), bucket_dim(64))
+    assert shape_bucket({"m": 100})[0][1] == shape_class((100,))[0]
+    assert shape_class((96, 100)) == shape_class((100, 100))   # same class
+    assert shape_class((8, 8)) != shape_class((100, 100))
+    assert shape_class((12,)) == (12.0,)                       # exact small
+
+
+def test_compiled_program_reuses_schedule_across_shape_jitter(tmp_path):
+    reg, devices = _devices(tmp_path)
+    prog, bindings = _diamond(reg)
+    compiled = prog.compile(devices=devices, bindings=bindings)
+    rng = np.random.RandomState(1)
+    M = N - 8                                  # same log2 class as N
+    assert shape_class((M, M)) == shape_class((N, N))
+    jitter = [jnp.asarray(rng.rand(M, M), jnp.float32) for _ in range(4)]
+    outs = compiled(*jitter)
+    ref = np.asarray(jitter[0]) @ np.asarray(jitter[1])
+    np.testing.assert_allclose(np.asarray(outs[0]), ref, rtol=2e-4)
+    assert outs[0].shape == (M, M)             # actual, not compiled, shape
+
+    # outside the class -> explicit re-trace error
+    tiny = [jnp.zeros((8, 8), jnp.float32)] * 4
+    with pytest.raises(ValueError, match="shape class"):
+        compiled(*tiny)
+
+    # same class but internally inconsistent dims -> caught by the
+    # abstract re-type-check at bind time, not deep inside a kernel
+    bad = [jnp.zeros((M, M), jnp.float32), jnp.zeros((N, M), jnp.float32),
+           jnp.zeros((M, M), jnp.float32), jnp.zeros((M, M), jnp.float32)]
+    with pytest.raises(ValueError, match="contraction dims"):
+        compiled(*bad)
+
+    # the async transfer hook must see payload sizes of the LIVE arrays,
+    # not the compiled specs — a real hook sizes its copy from tr.nbytes
+    seen = []
+
+    def hook(v, tr):
+        seen.append(tr.nbytes)
+        return v
+    comm = _comm(tmp_path, SimLink())
+    resized = prog.compile(devices=devices, bindings=bindings,
+                           executor="async", comm=comm, transfer=hook)
+    if resized.transfers:
+        resized(*jitter)
+        assert seen and all(nb == M * M * 4 for nb in seen)
+
+
+def test_time_callable_is_public_protocol():
+    calls = []
+    t = time_callable(lambda: calls.append(1), min_window=1e-4)
+    assert t > 0.0 and len(calls) >= 2         # warmup + >=1 timed rep
+    import importlib
+    dispatch_mod = importlib.import_module("repro.runtime.dispatch")
+    assert dispatch_mod.time_callable is time_callable

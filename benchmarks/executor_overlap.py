@@ -11,15 +11,18 @@ shows in one row whether the executor delivers the schedule's promise.
 
     PYTHONPATH=src python -m benchmarks.executor_overlap [--quick]
 
-Writes ``results/executor_overlap.csv`` and the widest diamond's Chrome
-trace to ``results/executor_overlap_trace.json`` (open in
-chrome://tracing or Perfetto; ``examples/async_pipeline.py`` owns
-``results/exec_trace.json``).
+Writes ``results/executor_overlap.csv``, the same rows as
+``results/executor_overlap.json`` (the structured form
+``repro.bench.fold_external`` merges into the unified ``bench.json``
+schema), and the widest diamond's Chrome trace to
+``results/executor_overlap_trace.json`` (open in chrome://tracing or
+Perfetto; ``examples/async_pipeline.py`` owns ``results/exec_trace.json``).
 """
 from __future__ import annotations
 
 import argparse
 import csv
+import json
 import os
 import time
 
@@ -31,26 +34,29 @@ QUICK_WIDTHS = (2, 4)
 
 
 def _diamond(reg, rng, width: int):
-    """Root -> K independent branches -> join, all NxN matmuls."""
+    """Root -> K independent branches -> join, all NxN matmuls; every node
+    (interior ones included) is an output via ``mark_output``."""
     import jax.numpy as jnp
 
-    from repro.api import Program, ops, trace
+    from repro.api import ops, trace
 
     arrs = [jnp.asarray(rng.rand(N, N), jnp.float32)
             for _ in range(2 + width)]
     with trace(registry=reg) as tb:
         root = ops.matmul(arrs[0], arrs[1])
         branches = [ops.matmul(root, w) for w in arrs[2:]]
+        joins = []
         join = branches[0]
         for b in branches[1:]:
             join = ops.matmul(join, b)
-    prog = tb.program
-    return Program(prog.inputs, prog.nodes,
-                   tuple(n.name for n in prog.nodes)), dict(tb.bindings)
+            joins.append(join)
+        tb.mark_output(root, *branches, *joins)
+    return tb.program, dict(tb.bindings)
 
 
 def run(quick: bool = False,
         out_csv: str = "results/executor_overlap.csv",
+        out_json: str = "results/executor_overlap.json",
         out_trace: str = "results/executor_overlap_trace.json",
         root: str = "results/fake_devices") -> list:
     from repro.exec import CommModel
@@ -102,6 +108,10 @@ def run(quick: bool = False,
         w = csv.DictWriter(f, fieldnames=list(rows[0]))
         w.writeheader()
         w.writerows(rows)
+    with open(out_json, "w") as f:
+        json.dump({"quick": quick, "rows": rows,
+                   "best_overlap_speedup":
+                       max(r["overlap_speedup"] for r in rows)}, f, indent=1)
     if last_trace is not None:
         last_trace.save_chrome(out_trace)
     return rows

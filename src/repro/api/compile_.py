@@ -92,13 +92,16 @@ def compile_program(program: Program, devices=None, policy=None,
     tasks = program.to_kernel_tasks()
     predict = predictor_from_runtime(dispatchers)
     comm_fn = comm.comm_fn() if hasattr(comm, "comm_fn") else comm
-    assignments = schedule(tasks, predict, list(dispatchers), comm=comm_fn)
+    homes: dict = {}
+    assignments = schedule(tasks, predict, list(dispatchers), comm=comm_fn,
+                           input_homes=homes)
     return CompiledProgram(program=program, dispatchers=dispatchers,
                            assignments=assignments,
                            bindings=dict(bindings or {}),
                            order=execution_order(tasks, assignments),
                            executor=executor, comm=comm_fn,
-                           buffers=plan_buffers(program, assignments),
+                           buffers=plan_buffers(program, assignments,
+                                                input_homes=homes),
                            transfer=transfer)
 
 

@@ -79,6 +79,7 @@ class TraceBuilder:
         self.bindings: dict = {}       # input name -> captured concrete array
         self._by_id: dict = {}         # id(array) -> LazyRef (dedup)
         self._counts: dict = {}
+        self._outputs: list = []       # mark_output overrides the leaf rule
 
     @property
     def registry(self):
@@ -119,11 +120,32 @@ class TraceBuilder:
         self.nodes.append(node)
         return LazyRef(node.name, node.out_shape, node.out_dtype, self)
 
+    def mark_output(self, *refs: LazyRef) -> None:
+        """Declare the program's outputs explicitly (in call order, deduped).
+        Without this, outputs default to the unconsumed leaves — which is
+        wrong for any DAG whose interior values matter (a benchmark reading
+        every stage, a residual branch that is also consumed).  Refs must
+        be node outputs recorded by *this* trace."""
+        node_names = {n.name for n in self.nodes}
+        for r in refs:
+            if not isinstance(r, LazyRef) or r.builder is not self:
+                raise ValueError(f"{r!r} is not a value of this trace()")
+            if r.name not in node_names:
+                raise ValueError(
+                    f"{r.name!r} is a program input, not a node output — "
+                    "inputs pass through unchanged and cannot be outputs")
+            if r.name not in self._outputs:
+                self._outputs.append(r.name)
+
     @property
     def program(self) -> Program:
-        """The recorded DAG; outputs default to the unconsumed leaves."""
-        consumed = {d for n in self.nodes for d in n.deps}
-        outs = tuple(n.name for n in self.nodes if n.name not in consumed)
+        """The recorded DAG; outputs are the ``mark_output`` declarations
+        when any were made, else the unconsumed leaves."""
+        if self._outputs:
+            outs = tuple(self._outputs)
+        else:
+            consumed = {d for n in self.nodes for d in n.deps}
+            outs = tuple(n.name for n in self.nodes if n.name not in consumed)
         return Program(tuple(self.inputs), tuple(self.nodes), outs)
 
     def compile(self, devices=None, policy=None, executor: str = "sequential",

@@ -137,13 +137,20 @@ class Program:
         """Lower to the ``core.scheduler`` form: one task per node, deps
         filtered to node names (program inputs are materialised values, not
         schedulable work).  ``out_bytes`` carries the output payload size so
-        a comm-aware schedule can price cross-device edges."""
+        a comm-aware schedule can price cross-device edges; ``input_deps``
+        carries (input name, nbytes) pairs so the same schedule prices
+        input->consumer transfers — the payloads ``exec.buffers`` will
+        place and potentially move."""
         from repro.exec.buffers import value_nbytes
         node_names = {n.name for n in self.nodes}
+        in_bytes = {s.name: float(value_nbytes(s.shape, s.dtype))
+                    for s in self.inputs}
         return [KernelTask(n.name, n.kernel, dict(n.params),
                            tuple(d for d in n.deps if d in node_names),
                            out_bytes=float(value_nbytes(n.out_shape,
-                                                        n.out_dtype)))
+                                                        n.out_dtype)),
+                           input_deps=tuple((d, in_bytes[d]) for d in n.deps
+                                            if d in in_bytes))
                 for n in self.nodes]
 
     # -- conveniences (lazy imports avoid package cycles) --------------------

@@ -1,0 +1,16 @@
+"""repro.bench — the standing end-to-end benchmark surface.
+
+``python -m repro.bench run [--quick]`` measures every workload in
+``repro.workloads`` across the standing device configs and writes a
+schema-versioned ``results/bench.json`` (speedups of predicted-best
+dispatch over default/worst variants, per-kernel prediction MAPE over the
+tuned grid, dispatch/executor overhead fractions, folded sibling
+artifacts).  ``python -m repro.bench compare A B`` diffs two documents
+and exits nonzero on regression.  Every later scale/speed PR reports
+against this surface.
+"""
+from repro.bench.compare_ import compare_docs, format_compare
+from repro.bench.harness import fold_external, run_bench, summarize
+from repro.bench.pinned import MODES, PinnedDispatcher
+from repro.bench.schema import (BENCH_SCHEMA_VERSION, load_bench,
+                                validate_bench)

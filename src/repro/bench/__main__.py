@@ -1,0 +1,75 @@
+"""CLI: ``python -m repro.bench {run,compare}``.
+
+    PYTHONPATH=src python -m repro.bench run --quick
+    PYTHONPATH=src python -m repro.bench compare \\
+        benchmarks/baseline_bench.json results/bench.json
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from repro.bench.compare_ import compare_docs, format_compare
+from repro.bench.harness import DEFAULT_CONFIGS, run_bench, summarize
+from repro.bench.schema import load_bench
+from repro.workloads import SIZES
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.bench")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    runp = sub.add_parser("run", help="measure the workload suite")
+    runp.add_argument("--quick", action="store_true",
+                      help="small presets, fewer reps, shorter NN+C fits")
+    runp.add_argument("--out", default="results/bench.json")
+    runp.add_argument("--results-dir", default="results",
+                      help="where sibling artifacts are folded from")
+    runp.add_argument("--workloads", default=None,
+                      help="comma-separated subset (default: all)")
+    runp.add_argument("--size", choices=SIZES, default=None)
+    runp.add_argument("--reps", type=int, default=None)
+    runp.add_argument("--configs", default=",".join(DEFAULT_CONFIGS),
+                      help="comma-separated device configs (cpu,simdev2)")
+
+    cmpp = sub.add_parser("compare",
+                          help="diff two bench.json files; exit 1 on "
+                               "regression, 2 when a document cannot be "
+                               "loaded")
+    cmpp.add_argument("baseline")
+    cmpp.add_argument("new")
+    cmpp.add_argument("--rel-tol", type=float, default=0.10,
+                      help="allowed relative geomean-speedup drop")
+    cmpp.add_argument("--mape-tol", type=float, default=10.0,
+                      help="allowed per-kernel MAPE rise (pp)")
+
+    args = ap.parse_args(argv)
+    if args.cmd == "run":
+        doc = run_bench(
+            quick=args.quick, out_path=args.out,
+            results_dir=args.results_dir,
+            workloads=args.workloads.split(",") if args.workloads else None,
+            size=args.size, reps=args.reps,
+            configs=tuple(args.configs.split(",")))
+        for line in summarize(doc):
+            print(line)
+        print(f"wrote {args.out}")
+        return 0
+    try:
+        baseline = load_bench(args.baseline)
+        new = load_bench(args.new)
+    except (OSError, ValueError) as e:
+        # distinct exit code: a missing/invalid document is a tooling
+        # failure, not a performance regression
+        print(f"bench compare: cannot load documents: {e}",
+              file=sys.stderr)
+        return 2
+    regressions, notes = compare_docs(baseline, new, rel_tol=args.rel_tol,
+                                      mape_tol=args.mape_tol)
+    for line in format_compare(regressions, notes):
+        print(line)
+    return 1 if regressions else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

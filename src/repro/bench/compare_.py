@@ -1,0 +1,105 @@
+"""``bench compare``: diff two bench.json documents, flag regressions.
+
+Comparison is deliberately *relative*: absolute wall seconds differ
+between machines, so the regression signal is the stuff prediction is
+supposed to buy — per-config geomean speedups, per-workload speedups,
+and per-kernel model MAPE — plus coverage (a workload or config present
+in the baseline must not vanish).  A regression list is returned (empty
+means clean); the CLI exits nonzero when it is non-empty, which CI treats
+as a non-blocking warning.
+"""
+from __future__ import annotations
+
+SPEEDUP_KEYS = ("speedup_vs_worst", "speedup_vs_default")
+
+
+REAL_SLACK = 3.0        # real-hardware MAPE thresholds get this factor;
+                        # sim configs are held tight
+
+
+def compare_docs(baseline: dict, new: dict, rel_tol: float = 0.10,
+                 mape_tol: float = 10.0) -> tuple:
+    """Return ``(regressions, notes)`` — lists of human-readable strings.
+
+    ``rel_tol`` is the allowed relative drop in a geomean speedup (per-
+    workload speedups get twice the slack: single-DAG numbers are
+    noisier); ``mape_tol`` is the allowed absolute rise in per-kernel
+    MAPE, in percentage points.
+
+    Configs whose ``kind`` is ``"real"`` are checked for *coverage* and
+    *model quality* (MAPE, at ``REAL_SLACK`` times the tolerance) only —
+    their wall-clock speedup ratios depend on which variant each fresh
+    tuning pass crowns predicted-worst, which swings by several x run to
+    run on a shared host, so thresholding them would only produce alert
+    fatigue.  Sim configs realize a deterministic schedule and their
+    speedups are held to the stated tolerances.
+    """
+    regressions, notes = [], []
+
+    def is_real(cfg: str) -> bool:
+        return baseline.get("configs", {}).get(cfg, {}).get("kind") \
+            == "real"
+
+    for cfg, g in baseline.get("geomean", {}).items():
+        ng = new.get("geomean", {}).get(cfg)
+        if ng is None:
+            regressions.append(f"geomean: config {cfg!r} missing from new")
+            continue
+        if is_real(cfg):
+            notes.append(f"geomean[{cfg}]: wall-clock speedups not "
+                         "thresholded (real-hardware config)")
+            continue
+        for key in SPEEDUP_KEYS:
+            old_v, new_v = float(g[key]), float(ng[key])
+            if new_v < old_v * (1.0 - rel_tol):
+                regressions.append(
+                    f"geomean[{cfg}].{key}: {old_v:.3f} -> {new_v:.3f} "
+                    f"(drop > {100 * rel_tol:.0f}%)")
+            elif new_v > old_v * (1.0 + rel_tol):
+                notes.append(f"geomean[{cfg}].{key}: improved "
+                             f"{old_v:.3f} -> {new_v:.3f}")
+
+    for wname, w in baseline.get("workloads", {}).items():
+        nw = new.get("workloads", {}).get(wname)
+        if nw is None:
+            regressions.append(f"workload {wname!r} missing from new")
+            continue
+        for cfg, r in w.get("configs", {}).items():
+            nr = nw.get("configs", {}).get(cfg)
+            if nr is None:
+                regressions.append(
+                    f"{wname}[{cfg}]: config missing from new")
+                continue
+            if not is_real(cfg):
+                tol = 2.0 * rel_tol
+                for key in SPEEDUP_KEYS:
+                    old_v, new_v = float(r[key]), float(nr[key])
+                    if new_v < old_v * (1.0 - tol):
+                        regressions.append(
+                            f"{wname}[{cfg}].{key}: "
+                            f"{old_v:.3f} -> {new_v:.3f} "
+                            f"(drop > {100 * tol:.0f}%)")
+            m_tol = mape_tol * (REAL_SLACK if is_real(cfg) else 1.0)
+            for kernel, old_m in r.get("mape", {}).items():
+                new_m = nr.get("mape", {}).get(kernel)
+                if new_m is None:
+                    regressions.append(
+                        f"{wname}[{cfg}].mape.{kernel}: missing from new")
+                elif float(new_m) > float(old_m) + m_tol:
+                    regressions.append(
+                        f"{wname}[{cfg}].mape.{kernel}: "
+                        f"{float(old_m):.1f}% -> {float(new_m):.1f}% "
+                        f"(rise > {m_tol:.0f}pp)")
+    return regressions, notes
+
+
+def format_compare(regressions: list, notes: list) -> list:
+    lines = []
+    if regressions:
+        lines.append(f"REGRESSIONS ({len(regressions)}):")
+        lines += [f"  - {r}" for r in regressions]
+    else:
+        lines.append("no regressions vs baseline")
+    for n in notes:
+        lines.append(f"  note: {n}")
+    return lines

@@ -1,0 +1,139 @@
+"""The ``results/bench.json`` schema: version gate + structural validator.
+
+Hand-rolled (no jsonschema dependency) but strict: every consumer —
+``bench compare``, CI, the tier-1 round-trip test — goes through
+``validate_bench``, so a malformed or stale document fails loudly with a
+path to the offending key instead of producing silently-wrong diffs.
+
+Document shape (schema 1)::
+
+    {
+      "schema": 1,
+      "quick": bool,
+      "generated_unix": float,
+      "host_fingerprint": {...},          # runtime.Fingerprint.to_json()
+      "configs": {                        # one entry per device config
+        "<cfg>": {"kind": "real"|"sim", "executor": str,
+                   "devices": [str, ...],
+                   "device_mape": {dev: {kernel: {"mape_pct": float,
+                                                   "n_rows": int}}}}},
+      "workloads": {
+        "<name>": {"size": str, "kernels": [str, ...], "n_nodes": int,
+          "configs": {"<cfg>": {
+            "n_transfers": int,
+            "wall_s": {"best"|"default"|"worst": float},
+            "predicted_makespan_s": {"best"|"default"|"worst": float},
+            "speedup_vs_default": float,   # default wall / best wall
+            "speedup_vs_worst": float,     # worst wall / best wall
+            "overhead": {"dispatch_frac": float,   # decision / wall
+                          "executor_frac": float},  # non-modelled wall share
+            "mape": {kernel: float}}}}},   # %, over the tuned grid
+      "geomean": {"<cfg>": {"speedup_vs_default": float,
+                             "speedup_vs_worst": float}},
+      "external": {...}                   # folded sibling artifacts, or {}
+    }
+"""
+from __future__ import annotations
+
+import json
+
+BENCH_SCHEMA_VERSION = 1
+MODES = ("best", "default", "worst")
+
+
+def _require(cond: bool, path: str, msg: str) -> None:
+    if not cond:
+        raise ValueError(f"bench.json invalid at {path}: {msg}")
+
+
+def _num(doc, path, key, lo=None):
+    _require(key in doc, path, f"missing {key!r}")
+    v = doc[key]
+    _require(isinstance(v, (int, float)) and not isinstance(v, bool),
+             f"{path}.{key}", f"expected a number, got {type(v).__name__}")
+    if lo is not None:
+        _require(v >= lo, f"{path}.{key}", f"expected >= {lo}, got {v}")
+    return float(v)
+
+
+def validate_bench(doc: dict) -> dict:
+    """Raise ValueError on a structurally invalid document; return it."""
+    _require(isinstance(doc, dict), "$", "expected an object")
+    _require(doc.get("schema") == BENCH_SCHEMA_VERSION, "$.schema",
+             f"unknown bench schema {doc.get('schema')!r} "
+             f"(this build reads {BENCH_SCHEMA_VERSION})")
+    _require(isinstance(doc.get("quick"), bool), "$.quick", "expected bool")
+    _num(doc, "$", "generated_unix", lo=0)
+    _require(isinstance(doc.get("host_fingerprint"), dict),
+             "$.host_fingerprint", "expected an object")
+
+    configs = doc.get("configs")
+    _require(isinstance(configs, dict) and configs, "$.configs",
+             "expected a non-empty object")
+    for cfg, c in configs.items():
+        path = f"$.configs.{cfg}"
+        _require(isinstance(c, dict), path, "expected an object")
+        _require(c.get("kind") in ("real", "sim"), f"{path}.kind",
+                 "expected 'real' or 'sim'")
+        _require(isinstance(c.get("executor"), str), f"{path}.executor",
+                 "expected a string")
+        _require(isinstance(c.get("devices"), list) and c["devices"],
+                 f"{path}.devices", "expected a non-empty list")
+        _require(isinstance(c.get("device_mape"), dict),
+                 f"{path}.device_mape", "expected an object")
+        for dev, kernels in c["device_mape"].items():
+            for kernel, m in kernels.items():
+                kp = f"{path}.device_mape.{dev}.{kernel}"
+                _num(m, kp, "mape_pct", lo=0)
+                _num(m, kp, "n_rows", lo=1)
+
+    workloads = doc.get("workloads")
+    _require(isinstance(workloads, dict) and workloads, "$.workloads",
+             "expected a non-empty object")
+    for name, w in workloads.items():
+        path = f"$.workloads.{name}"
+        _require(isinstance(w.get("size"), str), f"{path}.size",
+                 "expected a string")
+        _require(isinstance(w.get("kernels"), list) and w["kernels"],
+                 f"{path}.kernels", "expected a non-empty list")
+        _num(w, path, "n_nodes", lo=1)
+        _require(isinstance(w.get("configs"), dict) and w["configs"],
+                 f"{path}.configs", "expected a non-empty object")
+        for cfg, r in w["configs"].items():
+            cp = f"{path}.configs.{cfg}"
+            _require(cfg in configs, cp, "config not declared in $.configs")
+            _num(r, cp, "n_transfers", lo=0)
+            for section in ("wall_s", "predicted_makespan_s"):
+                _require(isinstance(r.get(section), dict), f"{cp}.{section}",
+                         "expected an object")
+                for mode in MODES:
+                    _num(r[section], f"{cp}.{section}", mode, lo=0)
+            _num(r, cp, "speedup_vs_default", lo=0)
+            _num(r, cp, "speedup_vs_worst", lo=0)
+            _require(isinstance(r.get("overhead"), dict), f"{cp}.overhead",
+                     "expected an object")
+            _num(r["overhead"], f"{cp}.overhead", "dispatch_frac", lo=0)
+            _num(r["overhead"], f"{cp}.overhead", "executor_frac", lo=0)
+            _require(isinstance(r.get("mape"), dict) and r["mape"],
+                     f"{cp}.mape", "expected a non-empty object")
+            for kernel, v in r["mape"].items():
+                _require(isinstance(v, (int, float)),
+                         f"{cp}.mape.{kernel}", "expected a number")
+
+    geo = doc.get("geomean")
+    _require(isinstance(geo, dict) and geo, "$.geomean",
+             "expected a non-empty object")
+    for cfg, g in geo.items():
+        _require(cfg in configs, f"$.geomean.{cfg}",
+                 "config not declared in $.configs")
+        _num(g, f"$.geomean.{cfg}", "speedup_vs_default", lo=0)
+        _num(g, f"$.geomean.{cfg}", "speedup_vs_worst", lo=0)
+
+    _require(isinstance(doc.get("external"), dict), "$.external",
+             "expected an object")
+    return doc
+
+
+def load_bench(path: str) -> dict:
+    with open(path) as f:
+        return validate_bench(json.load(f))

@@ -22,6 +22,9 @@ class KernelTask:
     out_bytes: float = 0.0      # payload size of this task's output — what
                                 # a cross-device successor must pull over
                                 # the link (0 disables comm costing)
+    input_deps: tuple = ()      # (program-input name, nbytes) pairs this
+                                # task reads — lets the comm-aware EFT
+                                # price input->consumer transfers too
 
 
 @dataclasses.dataclass
@@ -34,7 +37,8 @@ class Assignment:
 def schedule(tasks: Sequence[KernelTask],
              predict: Callable[[KernelTask, str], float],
              devices: Sequence[str],
-             comm: Optional[Callable[[str, str, float], float]] = None
+             comm: Optional[Callable[[str, str, float], float]] = None,
+             input_homes: Optional[dict] = None
              ) -> dict[str, Assignment]:
     """predict(task, device) -> seconds.  Returns task -> Assignment.
 
@@ -45,10 +49,25 @@ def schedule(tasks: Sequence[KernelTask],
     payload — so the makespan already accounts for the ``Transfer`` tasks
     ``repro.exec.buffers.plan_buffers`` will materialize, and a placement
     that looks fast compute-wise loses when it forces the bytes across a
-    slow link."""
+    slow link.
+
+    Program *inputs* are priced the same way: each task's ``input_deps``
+    names the input payloads it reads.  An input's home is pinned to the
+    device of its first *scheduled* consumer; any later-scheduled consumer
+    placed elsewhere waits for the predicted input transfer.  Input
+    payloads exist at t=0, so the transfer bounds the consumer's start
+    directly rather than adding to a producer finish.  Note the greedy
+    loop's scheduling order is not start-time order, so this pinning can
+    differ from an after-the-fact earliest-starting-consumer reading of
+    the assignments — pass ``input_homes`` (an empty dict, filled in
+    place) and hand it to ``repro.exec.buffers.plan_buffers`` so the
+    materialized placement matches what the EFT actually priced.
+    """
     done: dict[str, Assignment] = {}
     producer = {t.name: t for t in tasks}
     device_free = {d: 0.0 for d in devices}
+    input_home: dict[str, str] = \
+        input_homes if input_homes is not None else {}
     remaining = list(tasks)
     while remaining:
         ready = [t for t in remaining if all(d in done for d in t.deps)]
@@ -68,12 +87,23 @@ def schedule(tasks: Sequence[KernelTask],
                     avail += comm(done[d].device, dev,
                                   producer[d].out_bytes)
                 start = max(start, avail)
+            if comm is not None:
+                for iname, nbytes in task.input_deps:
+                    home = input_home.get(iname)
+                    if home is not None and home != dev:
+                        start = max(start, comm(home, dev, nbytes))
             finish = start + t_pred
             if best is None or finish < best[1].finish:
                 best = (dev, Assignment(dev, start, finish))
         dev, assign = best
         device_free[dev] = assign.finish
         done[task.name] = assign
+        if comm is not None:
+            # pinning only matters when transfers are priced; a comm-free
+            # schedule leaves placement to plan_buffers' earliest-starting-
+            # consumer rule (the pre-comm behaviour)
+            for iname, _ in task.input_deps:
+                input_home.setdefault(iname, dev)
         remaining.remove(task)
     return done
 

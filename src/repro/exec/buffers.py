@@ -59,14 +59,20 @@ class BufferTable:
         return None
 
 
-def plan_buffers(program, assignments) -> BufferTable:
+def plan_buffers(program, assignments,
+                 input_homes: Optional[dict] = None) -> BufferTable:
     """Derive the placement table and transfer list for a scheduled program.
 
-    ``assignments`` is the scheduler's node -> Assignment map.  Inputs are
-    placed on their earliest-starting consumer's device (ties broken by
-    node order); an input no node consumes (a passthrough output) stays on
-    the first device seen.  Transfers are emitted for every edge whose
-    consumer runs away from the value's home, one per (value, dst).
+    ``assignments`` is the scheduler's node -> Assignment map.
+    ``input_homes`` is the input -> device pinning the comm-aware EFT
+    recorded while scheduling (``core.scheduler.schedule(...,
+    input_homes=)``); passing it keeps the materialized placement
+    identical to what the schedule priced.  Inputs it does not name (or
+    all inputs, when it is None) are placed on their earliest-starting
+    consumer's device (ties broken by node order); an input no node
+    consumes (a passthrough output) stays on the first device seen.
+    Transfers are emitted for every edge whose consumer runs away from
+    the value's home, one per (value, dst).
     """
     placements: dict = {}
     for node in program.nodes:
@@ -76,8 +82,12 @@ def plan_buffers(program, assignments) -> BufferTable:
     for node in program.nodes:
         avals[node.name] = node.aval
 
-    # inputs: home = device of the earliest consumer
+    # inputs: the scheduler's pinning when given, else earliest consumer
+    pinned = input_homes or {}
     for spec in program.inputs:
+        if spec.name in pinned:
+            placements[spec.name] = pinned[spec.name]
+            continue
         consumers = [n for n in program.nodes if spec.name in n.deps]
         if consumers:
             first = min(consumers,

@@ -37,10 +37,6 @@ def time_callable(fn: Callable[[], object], min_window: float = 5e-3,
         reps = min(max_reps, max(reps * 2, int(reps * min_window / max(dt, 1e-9))))
 
 
-# retired private alias (kept one release so out-of-tree callers migrate)
-_time = time_callable
-
-
 # --- variants ---------------------------------------------------------------
 
 def mm_blas(p, a, b, v):
@@ -172,6 +168,6 @@ def measure_instance(kernel: str, variant: str, p: dict,
     if kernel == "mm" and variant == "einsum" and p["m"] * p["n"] * p["k"] > 2e8:
         rows = max(1, int(2e8 / (p["n"] * p["k"])))
         a_sub = a[:rows]
-        t = _time(lambda: fn(p, a_sub, b, v))
+        t = time_callable(lambda: fn(p, a_sub, b, v))
         return t * (p["m"] / rows)
-    return _time(lambda: fn(p, a, b, v))
+    return time_callable(lambda: fn(p, a, b, v))

@@ -19,3 +19,5 @@ from repro.runtime.registry import (ATTENTION_SCHEDULE_GRID,
                                     ATTENTION_SCHEDULES, KernelRegistry,
                                     RegisteredKernel, Variant,
                                     attention_flops, default_registry)
+from repro.runtime.seeding import (measure_from_programs, seed_from_programs,
+                                   variant_skews)

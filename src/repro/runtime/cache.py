@@ -84,6 +84,18 @@ class CacheEntry:
     def n_rows(self) -> int:
         return int(len(self.y))
 
+    def clear_rows(self) -> None:
+        """Drop measured rows, bucket coverage, and the fitted model — a
+        fresh tuning pass re-measures its grid; keeping rows from an
+        earlier pass would mix two noise regimes into one fit."""
+        self.X = np.zeros((0, len(self.feature_names) + 1))
+        self.y = np.zeros((0,))
+        self.buckets = set()
+        self.model = None
+        self.fit_mape = None
+        self.dirty = True
+        self.version += 1
+
     def add_rows(self, X: np.ndarray, y: Sequence[float],
                  bucket: tuple) -> None:
         X = np.atleast_2d(np.asarray(X, np.float64))

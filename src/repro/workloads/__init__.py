@@ -1,0 +1,107 @@
+"""repro.workloads — named, parameterized multi-kernel programs.
+
+The paper's end-to-end claim (predicted-variant pipelines beating fixed
+schedules) needs whole programs, not single kernels.  Each workload here
+is a small named suite entry that
+
+- builds a ``repro.api`` ``Program`` by *tracing* the public ops surface
+  (``build(size)``), with the concrete input arrays captured as default
+  bindings so the compiled program runs as-is,
+- carries a pure-JAX reference implementation computing the same outputs
+  from the same arrays (the numerics-parity oracle — kernel ``ref``
+  modules + ``attend_full``, no registry, no dispatch), and
+- exposes ``small`` / ``medium`` / ``large`` size presets.
+
+``repro.bench`` iterates this registry to produce the standing paper-table
+benchmark; tests iterate it for compiled-vs-reference parity.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+from repro.workloads.library import WORKLOAD_BUILDERS
+
+SIZES = ("small", "medium", "large")
+
+
+@dataclasses.dataclass(frozen=True)
+class BuiltWorkload:
+    """One materialized workload instance: the traced program, its captured
+    input bindings, and the matching pure-JAX reference."""
+    name: str
+    size: str
+    params: dict
+    program: object                  # repro.api Program
+    bindings: dict                   # input name -> concrete array
+    reference: Callable[[], tuple]   # () -> outputs in program.outputs order
+
+    @property
+    def n_nodes(self) -> int:
+        return len(self.program.nodes)
+
+    @property
+    def kernels_used(self) -> frozenset:
+        return frozenset(n.kernel for n in self.program.nodes)
+
+
+@dataclasses.dataclass(frozen=True)
+class Workload:
+    """A named, parameterized program family.
+
+    ``factory(params, rng)`` returns ``(make, reference)``: ``make()`` is
+    called under an active ``repro.api.trace`` and returns the output
+    ``LazyRef``s in order; ``reference()`` computes the same outputs with
+    pure JAX over the identical arrays.
+    """
+    name: str
+    kernels: tuple                   # kernel names the program uses
+    presets: dict                    # size -> params dict
+    factory: Callable
+
+    def build(self, size: str = "small", registry=None,
+              seed: int = 0) -> BuiltWorkload:
+        import numpy as np
+
+        from repro.api import trace
+
+        if size not in self.presets:
+            raise KeyError(f"workload {self.name!r} has no {size!r} preset "
+                           f"(have {sorted(self.presets)})")
+        params = dict(self.presets[size])
+        make, reference = self.factory(params, np.random.RandomState(seed))
+        with trace(registry=registry) as tb:
+            outs = make()
+            tb.mark_output(*outs)
+        return BuiltWorkload(self.name, size, params, tb.program,
+                             dict(tb.bindings), reference)
+
+
+WORKLOADS: dict[str, Workload] = {
+    name: Workload(name=name, kernels=tuple(kernels),
+                   presets={s: dict(p) for s, p in presets.items()},
+                   factory=factory)
+    for name, (kernels, presets, factory) in WORKLOAD_BUILDERS.items()
+}
+
+
+def workload_names() -> list[str]:
+    return sorted(WORKLOADS)
+
+
+def get_workload(name: str) -> Workload:
+    if name not in WORKLOADS:
+        raise KeyError(f"unknown workload {name!r}; available: "
+                       f"{workload_names()}")
+    return WORKLOADS[name]
+
+
+def suite_registry(names: Optional[list] = None):
+    """A kernel registry covering exactly the kernels the named workloads
+    (default: all) use — keeps jit-wrapped variant sets minimal."""
+    from repro.runtime import default_registry
+
+    kernels: set = set()
+    for name in (names or workload_names()):
+        kernels |= set(get_workload(name).kernels)
+    return default_registry(include=sorted(kernels))

@@ -1,0 +1,155 @@
+"""repro.bench: the quick run round-trips a schema-valid results/bench.json
+covering the whole suite (speedups, MAPE, overheads), the simdev config
+keeps predicted-best at or above the worst variant, compare flags
+synthetic regressions with a nonzero exit, and the schema gate rejects
+malformed documents."""
+import copy
+import json
+
+import pytest
+
+from repro.bench import (BENCH_SCHEMA_VERSION, compare_docs, load_bench,
+                         run_bench, validate_bench)
+from repro.bench.__main__ import main as bench_main
+from repro.workloads import workload_names
+
+
+@pytest.fixture(scope="module")
+def bench_doc(tmp_path_factory):
+    """One full quick run (both configs, all workloads) shared by the
+    round-trip assertions below."""
+    root = tmp_path_factory.mktemp("bench")
+    out = str(root / "bench.json")
+    doc = run_bench(quick=True, out_path=out,
+                    results_dir=str(root / "results"),
+                    device_root=str(root / "devices"))
+    return doc, out
+
+
+def test_quick_run_roundtrips_schema_with_full_suite(bench_doc):
+    doc, out = bench_doc
+    # the on-disk artifact parses and validates against the schema
+    reloaded = load_bench(out)
+    assert reloaded == json.loads(json.dumps(doc))
+    assert reloaded["schema"] == BENCH_SCHEMA_VERSION
+    assert reloaded["quick"] is True
+    # >=5 workloads, each with both configs and the required metrics
+    assert len(reloaded["workloads"]) >= 5
+    assert set(reloaded["workloads"]) == set(workload_names())
+    for w in reloaded["workloads"].values():
+        for cfg in ("cpu", "simdev2"):
+            r = w["configs"][cfg]
+            assert r["speedup_vs_default"] > 0
+            assert r["speedup_vs_worst"] > 0
+            assert set(r["wall_s"]) == {"best", "default", "worst"}
+            assert r["mape"], "per-kernel MAPE missing"
+            assert 0.0 <= r["overhead"]["dispatch_frac"] <= 1.0
+            assert 0.0 <= r["overhead"]["executor_frac"] <= 1.0
+
+
+def test_simdev_predicted_best_beats_worst(bench_doc):
+    """Acceptance: on the simulated config, where wall time realizes the
+    predicted schedule, best-variant dispatch must not lose to the worst
+    variant (geomean >= 1.0)."""
+    doc, _ = bench_doc
+    assert doc["geomean"]["simdev2"]["speedup_vs_worst"] >= 1.0
+    # and the seeded skews make the win strict, not a tie
+    assert doc["geomean"]["simdev2"]["speedup_vs_worst"] > 1.05
+    # per-workload sanity floor only: EFT list scheduling is subject to
+    # Graham anomalies, so strict per-DAG ordering is not an invariant
+    for name, w in doc["workloads"].items():
+        assert w["configs"]["simdev2"]["speedup_vs_worst"] > 0.8, name
+
+
+def test_compare_clean_and_synthetic_regression(bench_doc):
+    doc, _ = bench_doc
+    regs, _ = compare_docs(doc, copy.deepcopy(doc))
+    assert regs == []
+
+    # synthetic regression: geomean speedup collapses
+    worse = copy.deepcopy(doc)
+    worse["geomean"]["simdev2"]["speedup_vs_worst"] = 0.5
+    regs, _ = compare_docs(doc, worse)
+    assert any("geomean[simdev2].speedup_vs_worst" in r for r in regs)
+
+    # synthetic regression: a workload vanished
+    missing = copy.deepcopy(doc)
+    name = next(iter(missing["workloads"]))
+    del missing["workloads"][name]
+    regs, _ = compare_docs(doc, missing)
+    assert any(name in r and "missing" in r for r in regs)
+
+    # synthetic regression: per-kernel MAPE blows up
+    drift = copy.deepcopy(doc)
+    w = next(iter(drift["workloads"].values()))
+    cfg = w["configs"]["cpu"]
+    kernel = next(iter(cfg["mape"]))
+    cfg["mape"][kernel] += 50.0
+    regs, _ = compare_docs(doc, drift)
+    assert any(f"mape.{kernel}" in r for r in regs)
+
+
+def test_compare_cli_exits_nonzero_on_regression(bench_doc, tmp_path):
+    doc, out = bench_doc
+    worse = copy.deepcopy(doc)
+    for g in worse["geomean"].values():
+        g["speedup_vs_worst"] *= 0.5
+    worse_path = str(tmp_path / "worse.json")
+    with open(worse_path, "w") as f:
+        json.dump(worse, f)
+    assert bench_main(["compare", out, out]) == 0
+    assert bench_main(["compare", out, worse_path]) == 1
+    # tooling failure (missing/invalid document) is exit 2, not 1 — CI
+    # must not report a broken harness as a performance regression
+    assert bench_main(["compare", out, str(tmp_path / "ghost.json")]) == 2
+    (tmp_path / "junk.json").write_text("{}")
+    assert bench_main(["compare", str(tmp_path / "junk.json"), out]) == 2
+
+
+def test_schema_rejects_malformed(bench_doc):
+    doc, _ = bench_doc
+
+    def broken(mutate):
+        bad = copy.deepcopy(doc)
+        mutate(bad)
+        with pytest.raises(ValueError, match="bench.json invalid"):
+            validate_bench(bad)
+
+    broken(lambda d: d.__setitem__("schema", 99))
+    broken(lambda d: d.__delitem__("workloads"))
+    broken(lambda d: d.__setitem__("geomean", {}))
+    broken(lambda d: next(iter(d["workloads"].values()))
+           ["configs"]["cpu"]["wall_s"].__delitem__("worst"))
+    broken(lambda d: next(iter(d["workloads"].values()))
+           ["configs"]["cpu"].__setitem__("speedup_vs_worst", "fast"))
+    broken(lambda d: d["workloads"].__setitem__(
+        "rogue", {"size": "small", "kernels": ["matmul"], "n_nodes": 1,
+                  "configs": {"undeclared_cfg": {}}}))
+
+
+def test_run_rejects_unknown_config(tmp_path):
+    with pytest.raises(ValueError, match="unknown configs"):
+        run_bench(quick=True, out_path=str(tmp_path / "b.json"),
+                  results_dir=str(tmp_path), configs=("tpu-pod",))
+
+
+def test_external_artifacts_fold_into_document(tmp_path):
+    """Sibling benchmark outputs merge into the unified schema when
+    present (the runtime_overhead / executor_overlap satellite)."""
+    from repro.bench import fold_external
+    results = tmp_path / "results"
+    results.mkdir()
+    (results / "runtime_overhead.json").write_text(json.dumps({
+        "steady_overhead_pct": 2.5, "dispatches": 40,
+        "cases": {"512x512": {"regret_vs_oracle": 1.1,
+                              "speedup_vs_default": 1.3}}}))
+    (results / "executor_overlap.json").write_text(json.dumps({
+        "rows": [{"branches": 2, "overlap_speedup": 1.4},
+                 {"branches": 4, "overlap_speedup": 1.6}]}))
+    ext = fold_external(str(results))
+    assert ext["runtime_overhead"]["steady_overhead_pct"] == 2.5
+    assert ext["runtime_overhead"]["mean_regret_vs_oracle"] == \
+        pytest.approx(1.1)
+    assert ext["executor_overlap"]["best_overlap_speedup"] == \
+        pytest.approx(1.6)
+    assert fold_external(str(tmp_path / "empty")) == {}

@@ -190,6 +190,108 @@ def test_transfer_insertion_and_makespan_accounting(tmp_path):
     assert compiled.makespan >= makespan(free) - 1e-12
 
 
+def test_input_transfers_priced_by_eft(tmp_path):
+    """PR-4 open item closed: an input consumed on a device other than its
+    home (first consumer's device) delays that consumer by the predicted
+    transfer — the makespan accounts for the input Transfers plan_buffers
+    materializes, not just node->node edges."""
+    reg, devices = _devices(tmp_path)
+    link = SimLink(latency_s=2e-3, bytes_per_s=1e9)
+    comm = _comm(tmp_path, link)
+
+    # one shared input x feeding two independent branches: a big matmul
+    # (scheduled first, homes x) and a small one the EFT pushes to the
+    # other device, which must then wait for x to cross the link
+    rng = np.random.RandomState(0)
+    x = jnp.asarray(rng.rand(N, N), jnp.float32)
+    wb = jnp.asarray(rng.rand(N, 4 * N), jnp.float32)
+    ws = jnp.asarray(rng.rand(N, N), jnp.float32)
+    with trace(registry=reg) as tb:
+        big = ops.matmul(x, wb)
+        small = ops.matmul(x, ws)
+    prog = tb.program
+
+    tasks = prog.to_kernel_tasks()
+    by_name = {t.name: t for t in tasks}
+    x_bytes = float(value_nbytes((N, N), "float32"))
+    assert by_name[big.name].input_deps == (("in0", x_bytes),
+                                            ("in1", x_bytes * 4))
+    assert by_name[small.name].deps == ()      # inputs are not task deps
+
+    compiled = prog.compile(devices=devices, bindings=tb.bindings,
+                            comm=comm)
+    a = compiled.assignments
+    assert a[big.name].device != a[small.name].device, \
+        "EFT should spread the independent branches"
+    # x homes with the big branch (first scheduled, earliest start) and a
+    # Transfer materializes toward the small branch's device
+    home = compiled.buffers.device_of("in0")
+    assert home == a[big.name].device
+    xfer = compiled.buffers.transfer_for("in0", a[small.name].device)
+    assert xfer is not None and xfer.nbytes == int(x_bytes)
+    # the priced delay: the small branch cannot start before x arrives
+    lag = comm.predict(home, a[small.name].device, x_bytes)
+    assert lag > 0.0
+    assert a[small.name].start >= lag - 1e-12
+
+    # pricing inputs can only push the makespan out vs the comm-free EFT
+    predict = lambda t, dev: devices[dev].predict_time(t.kernel, t.params)
+    from repro.core.scheduler import makespan
+    free = schedule(tasks, predict, list(devices))
+    assert compiled.makespan >= makespan(free) - 1e-12
+
+    # and execution still matches across back ends with the input transfer
+    out_seq = compiled(_executor="sequential")
+    out_async = compiled(_executor="async")
+    for s_, a_ in zip(out_seq, out_async):
+        assert np.array_equal(np.asarray(s_), np.asarray(a_))
+
+
+def test_input_home_consistent_between_eft_and_buffers(tmp_path):
+    """The scheduler pins an input to its first-SCHEDULED consumer, which
+    is not always the earliest-STARTING one (greedy order != start order).
+    plan_buffers must follow the scheduler's pinning, or the materialized
+    transfer runs in a direction the makespan never priced."""
+    reg, devices = _devices(tmp_path)
+    comm = _comm(tmp_path, SimLink(latency_s=1e-3, bytes_per_s=1e9))
+
+    # n (big) -> A (consumes n and input x); B (small, consumes x only).
+    # LPT schedules n, then A (pinning x with A), then B — but B *starts*
+    # earliest, so the earliest-start rule would home x with B instead.
+    rng = np.random.RandomState(0)
+    a0 = jnp.asarray(rng.rand(N, N), jnp.float32)
+    a1 = jnp.asarray(rng.rand(N, 2 * N), jnp.float32)
+    x = jnp.asarray(rng.rand(2 * N, N), jnp.float32)
+    wee = jnp.asarray(rng.rand(N, 48), jnp.float32)
+    with trace(registry=reg) as tb:
+        root = ops.matmul(a0, a1)          # N x 2N, big, ready at t=0
+        big = ops.matmul(root, x)          # consumes x, only after root
+        small = ops.matmul(x, wee)         # consumes x, tiny, ready at t=0
+    prog = tb.program
+    compiled = prog.compile(devices=devices, bindings=tb.bindings,
+                            comm=comm)
+    asn = compiled.assignments
+    if asn[big.name].device == asn[small.name].device:
+        pytest.skip("EFT kept both consumers together on this host")
+    # scheduling order pinned x with `big`'s branch even though `small`
+    # starts first; the materialized home must match the priced one
+    assert asn[small.name].start < asn[big.name].start
+    home = compiled.buffers.device_of("in2")       # x is the third input
+    assert home == asn[big.name].device
+    # the only x transfer runs home -> small's device, and small waited
+    # at least the predicted lag for it
+    xfers = [t for t in compiled.transfers if t.value == "in2"]
+    assert [(t.src, t.dst) for t in xfers] \
+        == [(home, asn[small.name].device)]
+    lag = comm.predict(home, asn[small.name].device, xfers[0].nbytes)
+    assert asn[small.name].start >= lag - 1e-12
+    # execution works end to end with the input transfer in place
+    seq = compiled(_executor="sequential")
+    asy = compiled(_executor="async")
+    for s_, a_ in zip(seq, asy):
+        assert np.array_equal(np.asarray(s_), np.asarray(a_))
+
+
 def test_value_nbytes_and_transfer_payloads(tmp_path):
     reg, devices = _devices(tmp_path)
     comm = _comm(tmp_path, SimLink())

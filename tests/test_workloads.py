@@ -1,0 +1,151 @@
+"""repro.workloads: every suite entry builds a valid traced Program whose
+compiled (async, two-simulated-device) outputs match its pure-JAX
+reference <=1e-5 on the small presets, plus preset/registry plumbing and
+the mark_output trace ergonomic the suite leans on."""
+import numpy as np
+import pytest
+
+from repro.api import ops, trace
+from repro.bench.pinned import PinnedDispatcher
+from repro.runtime import (Dispatcher, Fingerprint, TuningCache,
+                           seed_from_programs, variant_skews)
+from repro.workloads import (SIZES, get_workload, suite_registry,
+                             workload_names)
+
+ALL = workload_names()
+
+
+@pytest.fixture(scope="module")
+def registry():
+    return suite_registry()
+
+
+def _two_seeded_devices(tmp_path, registry, programs):
+    devices = {}
+    for name, speed in [("d0", 1.0e9), ("d1", 0.8e9)]:
+        fp = Fingerprint("sim", f"wl-{name}", 1, 1, ("float32",))
+        cache = TuningCache(root=str(tmp_path / "devs"), fingerprint=fp)
+        d = Dispatcher(registry=registry, cache=cache)
+        seed_from_programs(d, programs, speed)
+        devices[name] = d
+    return devices
+
+
+def test_registry_covers_five_diverse_workloads():
+    assert len(ALL) >= 5
+    assert {"image_pipeline", "mlp_block", "attention_block",
+            "decode_microbatch", "mixed_dag"} <= set(ALL)
+    for name in ALL:
+        w = get_workload(name)
+        assert set(SIZES) <= set(w.presets), f"{name} missing a preset"
+    # diversity: the suite collectively exercises every registry kernel
+    used = set().union(*(get_workload(n).kernels for n in ALL))
+    assert used == {"matmul", "matvec", "conv2d", "maxpool", "blur",
+                    "flash_attention"}
+
+
+def test_unknown_workload_and_preset_raise():
+    with pytest.raises(KeyError, match="unknown workload"):
+        get_workload("ghost")
+    with pytest.raises(KeyError, match="preset"):
+        get_workload("mlp_block").build("colossal")
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_build_is_deterministic_and_valid(name, registry):
+    w = get_workload(name)
+    b1 = w.build("small", registry=registry)
+    b2 = w.build("small", registry=registry)
+    assert b1.program == b2.program
+    # declared kernel set matches the traced program
+    assert b1.kernels_used == set(w.kernels)
+    # programs re-check against the registry (abstract hooks agree)
+    b1.program.check(registry)
+    assert set(b1.bindings) == {s.name for s in b1.program.inputs}
+    # medium presets build too (structure only; no execution)
+    assert w.build("medium", registry=registry).n_nodes >= b1.n_nodes
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_compiled_async_matches_reference(name, tmp_path, registry):
+    """Acceptance: the full stack (trace -> comm-free EFT over two seeded
+    sim devices -> buffer planning -> async executor) reproduces the pure-
+    JAX reference <=1e-5 on every workload's small preset."""
+    built = get_workload(name).build("small", registry=registry)
+    devices = _two_seeded_devices(tmp_path, registry, [built.program])
+    compiled = built.program.compile(devices=devices,
+                                     bindings=built.bindings,
+                                     executor="async")
+    outs = compiled()
+    outs = outs if isinstance(outs, tuple) else (outs,)
+    refs = built.reference()
+    assert len(outs) == len(refs)
+    for o, r in zip(outs, refs):
+        np.testing.assert_allclose(np.asarray(o), np.asarray(r),
+                                   rtol=1e-5, atol=1e-5)
+    # and the async path agrees with the sequential reference bridge
+    seq = compiled(_executor="sequential")
+    seq = seq if isinstance(seq, tuple) else (seq,)
+    for a, s in zip(outs, seq):
+        assert np.array_equal(np.asarray(a), np.asarray(s))
+
+
+def test_mixed_dag_outputs_include_interior_node(registry):
+    """mark_output lets a consumed (interior) node be an output — the leaf
+    rule alone could never return mixed_dag's root."""
+    b = get_workload("mixed_dag").build("small", registry=registry)
+    prog = b.program
+    root = prog.outputs[-1]
+    consumed = {d for n in prog.nodes for d in n.deps}
+    assert root in consumed
+
+
+def test_mark_output_validation(registry):
+    import jax.numpy as jnp
+    a = jnp.zeros((8, 8), jnp.float32)
+    with trace(registry=registry) as tb:
+        y = ops.blur(a)
+    with trace(registry=registry) as other:
+        z = ops.blur(a)
+        # a ref from another trace is rejected
+        with pytest.raises(ValueError, match="not a value of this trace"):
+            other.mark_output(y)
+        # inputs cannot be outputs
+        lazy_in = other._by_id[id(a)]
+        with pytest.raises(ValueError, match="program input"):
+            other.mark_output(lazy_in)
+        other.mark_output(z, z)                    # dedup
+    assert other.program.outputs == (z.name,)
+
+
+def test_variant_skews_winner_is_never_default():
+    for kernel in ("matmul", "matvec", "blur", "flash_attention"):
+        for n in (2, 3, 5):
+            s = variant_skews(n, kernel)
+            assert s.shape == (n,)
+            assert int(np.argmin(s)) != 0          # default never wins
+            assert s.min() == pytest.approx(1.0)
+            assert s.max() == pytest.approx(2.0)
+    assert variant_skews(1, "blur").tolist() == [1.0]
+    # deterministic
+    assert variant_skews(5, "blur").tolist() == \
+        variant_skews(5, "blur").tolist()
+
+
+def test_seeded_caches_make_pinned_modes_ordered(tmp_path, registry):
+    """On seeded caches best <= default <= worst predicted time per node,
+    with best strictly under worst for every multi-variant kernel."""
+    built = get_workload("mixed_dag").build("small", registry=registry)
+    fp = Fingerprint("sim", "ord", 1, 1, ("float32",))
+    cache = TuningCache(root=str(tmp_path / "ord"), fingerprint=fp)
+    seed_from_programs(Dispatcher(registry=registry, cache=cache),
+                       [built.program], 1.0e9)
+    modes = {m: PinnedDispatcher(registry=registry, cache=cache, mode=m)
+             for m in ("best", "default", "worst")}
+    for node in built.program.nodes:
+        t = {m: d.predict_time(node.kernel, node.params)
+             for m, d in modes.items()}
+        assert t["best"] <= t["default"] + 1e-15
+        assert t["best"] <= t["worst"] + 1e-15
+        if len(registry.variants(node.kernel)) > 1:
+            assert t["best"] < t["worst"]

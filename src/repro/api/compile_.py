@@ -17,6 +17,19 @@ Execution has two interchangeable back ends over the same schedule:
   device plus one per link lane; nodes fire when their deps resolve, so
   independent branches genuinely overlap and transfers run concurrently
   with compute.  Both paths record an ``ExecutionTrace`` (``last_trace``).
+- ``executor="adaptive"`` — the async executor with runtime re-dispatch:
+  when a node becomes ready and its planned device is loaded, the
+  executor asks the *live* predictors whether moving the inputs and
+  running on an idle device beats waiting (moves priced through the same
+  comm model the EFT used), steals when it does, and pays the physical
+  input moves inline through the ``transfer`` hook.  With ``online=``
+  every completed node's actual wall time feeds back through a per-device
+  ``runtime.online.OnlineRefiner``, so predictions — and therefore later
+  steal decisions — improve mid-run and across runs.  With ``topology=``
+  (a ``repro.exec.Topology``) transfers contend for shared-bus lanes in
+  both the EFT schedule and the executor.  Outputs stay bit-identical to
+  the sequential reference per node: stealing changes *where and when*
+  work runs, never what it computes.
 
 Input shape specs are *bucketed*: a call whose shapes fall in the same
 ``runtime.cache.shape_class`` as the compiled specs reuses the schedule
@@ -36,13 +49,15 @@ import numpy as np
 from repro.api.program import Program
 from repro.core.scheduler import (Assignment, execution_order, makespan,
                                   predictor_from_runtime, schedule)
-from repro.exec.buffers import BufferTable, plan_buffers, value_nbytes
-from repro.exec.executor import AsyncExecutor, ExecTask
+from repro.exec.buffers import (BufferTable, Transfer, plan_buffers,
+                                value_nbytes)
+from repro.exec.executor import AsyncExecutor, ExecTask, StealPolicy
 from repro.exec.trace import ExecutionTrace
 from repro.kernels import Aval
-from repro.runtime.cache import shape_class
+from repro.runtime.cache import shape_bucket, shape_class
+from repro.runtime.online import OnlineConfig, OnlineRefiner
 
-EXECUTORS = ("sequential", "async")
+EXECUTORS = ("sequential", "async", "adaptive")
 
 
 def _resolve_devices(devices, policy) -> dict:
@@ -77,12 +92,22 @@ def _resolve_devices(devices, policy) -> dict:
 
 def compile_program(program: Program, devices=None, policy=None,
                     bindings=None, executor: str = "sequential",
-                    comm=None, transfer=None) -> "CompiledProgram":
+                    comm=None, transfer=None, topology=None,
+                    steal=None, online=None) -> "CompiledProgram":
     """``comm`` is a ``repro.exec.CommModel`` (or a bare
     ``(src, dst, nbytes) -> seconds`` callable) that makes the EFT
     schedule transfer-aware; ``transfer`` is the physical move hook
     ``(value, Transfer) -> value`` the async path applies per materialized
-    transfer (None: same-host devices share memory, the move is free)."""
+    transfer (None: same-host devices share memory, the move is free).
+
+    ``topology`` is a ``repro.exec.Topology``: transfers then queue on
+    shared-bus lanes in both the EFT schedule and the executor (a bus with
+    capacity k gets k lane workers).  ``steal`` is a
+    ``repro.exec.StealPolicy`` for the adaptive back end (defaults to
+    ``StealPolicy()`` when ``executor="adaptive"``).  ``online`` enables
+    execution-time feedback: ``True`` or a ``runtime.online.OnlineConfig``
+    builds one ``OnlineRefiner`` per device over that device's tuning
+    cache, fed the actual duration of every completed node."""
     if executor not in EXECUTORS:
         raise ValueError(f"executor must be one of {EXECUTORS}, "
                          f"got {executor!r}")
@@ -94,15 +119,23 @@ def compile_program(program: Program, devices=None, policy=None,
     comm_fn = comm.comm_fn() if hasattr(comm, "comm_fn") else comm
     homes: dict = {}
     assignments = schedule(tasks, predict, list(dispatchers), comm=comm_fn,
-                           input_homes=homes)
+                           input_homes=homes, topology=topology)
+    refiners: dict = {}
+    if online:
+        config = online if isinstance(online, OnlineConfig) else \
+            OnlineConfig()
+        refiners = {name: OnlineRefiner(disp.cache, config)
+                    for name, disp in dispatchers.items()}
     return CompiledProgram(program=program, dispatchers=dispatchers,
                            assignments=assignments,
                            bindings=dict(bindings or {}),
                            order=execution_order(tasks, assignments),
                            executor=executor, comm=comm_fn,
                            buffers=plan_buffers(program, assignments,
-                                                input_homes=homes),
-                           transfer=transfer)
+                                                input_homes=homes,
+                                                topology=topology),
+                           transfer=transfer, topology=topology,
+                           steal=steal, refiners=refiners)
 
 
 @dataclasses.dataclass
@@ -117,6 +150,10 @@ class CompiledProgram:
     comm: Optional[Callable] = None   # (src, dst, nbytes) -> seconds
     buffers: Optional[BufferTable] = None
     transfer: Optional[Callable] = None   # (value, Transfer) -> value
+    topology: Optional[object] = None     # repro.exec.Topology (or None)
+    steal: Optional[StealPolicy] = None   # adaptive re-dispatch policy
+    refiners: dict = dataclasses.field(default_factory=dict)
+    #   device name -> OnlineRefiner; non-empty enables execution feedback
     last_trace: Optional[ExecutionTrace] = None  # set by every execution
 
     @property
@@ -210,11 +247,85 @@ class CompiledProgram:
                 node.kernel, *(env[d] for d in node.deps), **node.kwargs)
             tracer.record(task.name, "compute", dev, t0, time.perf_counter())
 
-    def _exec_tasks(self, env) -> list[ExecTask]:
+    # -- adaptive helpers ----------------------------------------------------
+    @staticmethod
+    def _wall_scale(disp) -> float:
+        """Simulated dispatchers sleep ``predicted * time_scale`` wall
+        seconds; scaling their predictions by the same factor keeps the
+        executor's load ledger (wall clock) and the steal rule's predicted
+        costs in one unit.  Real dispatchers have no scale (1.0)."""
+        return float(getattr(disp, "time_scale", 1.0) or 1.0)
+
+    def _steal_fetch(self, env_, env, value: str, dev: str,
+                     node_names: frozenset):
+        """Read ``value`` raw (producer output or program input) and pay
+        the physical move to ``dev`` when it lives elsewhere — the inline
+        transfer a stolen task owes instead of the planned one."""
+        v = env_[value] if value in node_names else env[value]
+        home = self.buffers.device_of(value)
+        if home == dev or self.transfer is None:
+            return v
+        shape = np.shape(v)
+        dtype = getattr(v, "dtype", None)
+        if dtype is None:
+            dtype = np.asarray(v).dtype
+        bus = self.topology.bus_of(home, dev) \
+            if self.topology is not None else None
+        tr = Transfer(value, home, dev, value_nbytes(shape, dtype),
+                      bus=bus.name if bus else None)
+        t0 = time.perf_counter()
+        out = self.transfer(v, tr)
+        if self.last_trace is not None:
+            self.last_trace.record(tr.name, "transfer", tr.lane, t0,
+                                   time.perf_counter(), note="steal-move")
+        return out
+
+    def _observe_hook(self) -> Optional[Callable]:
+        """``(ExecTask, device, seconds) -> None`` feeding actual node
+        durations into the executing device's refiner (best-variant row,
+        wall time de-scaled back to model units), or None when compiled
+        without ``online=``."""
+        if not self.refiners:
+            return None
+        kt_by = {t.name: t for t in self.order}
+
+        def observe(task: ExecTask, lane: str, seconds: float) -> None:
+            refiner = self.refiners.get(lane)
+            kt = kt_by.get(task.name)
+            if refiner is None or kt is None:
+                return
+            disp = self.dispatchers[lane]
+            pred = disp.predict_times(kt.kernel, kt.params)
+            names = disp.registry.variant_names(kt.kernel)
+            best = min(pred, key=pred.get)
+            rows = disp.registry.feature_rows(kt.kernel, kt.params)
+            refiner.observe(kt.kernel, rows[names.index(best)],
+                            shape_bucket(kt.params),
+                            seconds / self._wall_scale(disp),
+                            predicted_s=float(pred[best]))
+        return observe
+
+    def _lane_widths(self) -> Optional[dict]:
+        return self.topology.lane_widths() \
+            if self.topology is not None else None
+
+    def _exec_tasks(self, env, adaptive: bool = False) -> list[ExecTask]:
         """Lower the scheduled program to executor tasks: one compute task
         per node on its assigned device, one transfer task per materialized
-        move on its link lane; priorities follow the predicted timeline."""
+        move on its link lane; priorities follow the predicted timeline.
+
+        With ``adaptive`` every compute task additionally carries the
+        re-dispatch metadata: a device-parameterized body (``run_on``) that
+        pays inline input moves when running away from the plan, a live
+        ``predict`` closure over the device dispatchers, and the input
+        (value, home, nbytes) triples the steal rule prices.  Dependencies
+        are identical to the static lowering — a stolen task still waits
+        for its planned transfers, so steal decisions always happen with
+        every dependency resolved and bit-exactness is placement-invariant.
+        """
         node_by = {n.name: n for n in self.program.nodes}
+        node_names = frozenset(node_by)
+        kt_by = {t.name: t for t in self.order}
         tasks: list[ExecTask] = []
         for tr in self.buffers.transfers:
             from_node = tr.value in node_by
@@ -261,16 +372,59 @@ class CompiledProgram:
                 vals = [env[d] if s is None else env_[s]
                         for d, s in zip(node.deps, sources)]
                 return disp.dispatch(node.kernel, *vals, **node.kwargs)
+            extra: dict = {}
+            if adaptive:
+                kt = kt_by[task.name]
+
+                def run_on(env_, on_dev, node=node, dev=dev,
+                           sources=tuple(sources)):
+                    if on_dev == dev:       # planned device: planned moves
+                        vals = [env[d] if s is None else env_[s]
+                                for d, s in zip(node.deps, sources)]
+                    else:                   # stolen: raw values, inline moves
+                        vals = [self._steal_fetch(env_, env, d, on_dev,
+                                                  node_names)
+                                for d in node.deps]
+                    return self.dispatchers[on_dev].dispatch(
+                        node.kernel, *vals, **node.kwargs)
+
+                def predict(on_dev, kt=kt):
+                    disp_ = self.dispatchers[on_dev]
+                    return float(disp_.predict_time(kt.kernel, kt.params)) \
+                        * self._wall_scale(disp_)
+
+                inputs = tuple(
+                    (d, self.buffers.device_of(d),
+                     value_nbytes(self.program.aval_of(d).shape,
+                                  self.program.aval_of(d).dtype))
+                    for d in node.deps)
+                extra = {"run_on": run_on, "predict": predict,
+                         "runnable_on": tuple(self.dispatchers),
+                         "inputs": inputs}
             tasks.append(ExecTask(node.name, dev, run, tuple(deps),
                                   kind="compute",
-                                  priority=self.assignments[node.name].start))
+                                  priority=self.assignments[node.name].start,
+                                  **extra))
         return tasks
 
     def _run_async(self, env) -> None:
         tracer = ExecutionTrace()
         self.last_trace = tracer       # pre-installed: failures keep the
                                        # partial trace of the dying run
-        results = AsyncExecutor(tracer=tracer).run(self._exec_tasks(env))
+        results = AsyncExecutor(tracer=tracer).run(
+            self._exec_tasks(env), lane_width=self._lane_widths())
+        for node in self.program.nodes:
+            env[node.name] = results[node.name]
+
+    def _run_adaptive(self, env) -> None:
+        tracer = ExecutionTrace()
+        self.last_trace = tracer
+        executor = AsyncExecutor(tracer=tracer,
+                                 steal=self.steal or StealPolicy(),
+                                 comm=self.comm,
+                                 observe=self._observe_hook())
+        results = executor.run(self._exec_tasks(env, adaptive=True),
+                               lane_width=self._lane_widths())
         for node in self.program.nodes:
             env[node.name] = results[node.name]
 
@@ -285,7 +439,9 @@ class CompiledProgram:
             raise ValueError(f"executor must be one of {EXECUTORS}, "
                              f"got {mode!r}")
         env = self._bind(args, named)
-        if mode == "async":
+        if mode == "adaptive":
+            self._run_adaptive(env)
+        elif mode == "async":
             self._run_async(env)
         else:
             self._run_sequential(env)

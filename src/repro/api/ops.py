@@ -149,13 +149,15 @@ class TraceBuilder:
         return Program(tuple(self.inputs), tuple(self.nodes), outs)
 
     def compile(self, devices=None, policy=None, executor: str = "sequential",
-                comm=None, transfer=None):
+                comm=None, transfer=None, topology=None, steal=None,
+                online=None):
         """Compile the recorded program with the captured arrays pre-bound,
         so the returned ``CompiledProgram`` can be called with no args."""
         return self.program.compile(devices=devices, policy=policy,
                                     bindings=dict(self.bindings),
                                     executor=executor, comm=comm,
-                                    transfer=transfer)
+                                    transfer=transfer, topology=topology,
+                                    steal=steal, online=online)
 
 
 @contextlib.contextmanager

@@ -1,17 +1,21 @@
-"""CLI: ``python -m repro.bench {run,compare}``.
+"""CLI: ``python -m repro.bench {run,adaptive,compare}``.
 
     PYTHONPATH=src python -m repro.bench run --quick
+    PYTHONPATH=src python -m repro.bench adaptive --quick
     PYTHONPATH=src python -m repro.bench compare \\
-        benchmarks/baseline_bench.json results/bench.json
+        benchmarks/baseline_bench.json results/bench.json --only-kind sim
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
 
 from repro.bench.compare_ import compare_docs, format_compare
-from repro.bench.harness import DEFAULT_CONFIGS, run_bench, summarize
-from repro.bench.schema import load_bench
+from repro.bench.harness import (DEFAULT_CONFIGS, run_adaptive, run_bench,
+                                 summarize)
+from repro.bench.schema import load_bench, validate_bench
 from repro.workloads import SIZES
 
 
@@ -32,6 +36,19 @@ def main(argv=None) -> int:
     runp.add_argument("--configs", default=",".join(DEFAULT_CONFIGS),
                       help="comma-separated device configs (cpu,simdev2)")
 
+    adp = sub.add_parser("adaptive",
+                         help="run the mis-seeded adaptive-vs-static "
+                              "scenario and merge it into an existing "
+                              "bench.json (as the schema-2 'adaptive' "
+                              "section)")
+    adp.add_argument("--quick", action="store_true")
+    adp.add_argument("--out", default="results/bench.json",
+                     help="bench document to merge into (must exist; "
+                          "run 'bench run' first)")
+    adp.add_argument("--results-dir", default="results")
+    adp.add_argument("--workloads", default=None)
+    adp.add_argument("--size", choices=SIZES, default=None)
+
     cmpp = sub.add_parser("compare",
                           help="diff two bench.json files; exit 1 on "
                                "regression, 2 when a document cannot be "
@@ -42,6 +59,9 @@ def main(argv=None) -> int:
                       help="allowed relative geomean-speedup drop")
     cmpp.add_argument("--mape-tol", type=float, default=10.0,
                       help="allowed per-kernel MAPE rise (pp)")
+    cmpp.add_argument("--only-kind", choices=("sim", "real"), default=None,
+                      help="restrict to configs of this kind (CI blocks "
+                           "on sim, warns on real)")
 
     args = ap.parse_args(argv)
     if args.cmd == "run":
@@ -55,6 +75,30 @@ def main(argv=None) -> int:
             print(line)
         print(f"wrote {args.out}")
         return 0
+    if args.cmd == "adaptive":
+        try:
+            doc = load_bench(args.out)
+        except (OSError, ValueError) as e:
+            print(f"bench adaptive: cannot load {args.out} ({e}); "
+                  "run 'python -m repro.bench run' first", file=sys.stderr)
+            return 2
+        section = run_adaptive(
+            quick=args.quick, results_dir=args.results_dir,
+            workloads=args.workloads.split(",") if args.workloads else None,
+            size=args.size)
+        doc["adaptive"] = section
+        doc["schema"] = max(int(doc["schema"]), 2)
+        validate_bench(doc)
+        tmp = args.out + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(doc, f, indent=1)
+        os.replace(tmp, args.out)
+        for line in summarize(doc):
+            print(line)
+        g = section["geomean_speedup_vs_static"]
+        print(f"adaptive geomean speedup vs static replay: {g:.2f}x")
+        print(f"merged adaptive section into {args.out}")
+        return 0 if g > 1.0 else 1
     try:
         baseline = load_bench(args.baseline)
         new = load_bench(args.new)
@@ -65,7 +109,8 @@ def main(argv=None) -> int:
               file=sys.stderr)
         return 2
     regressions, notes = compare_docs(baseline, new, rel_tol=args.rel_tol,
-                                      mape_tol=args.mape_tol)
+                                      mape_tol=args.mape_tol,
+                                      only_kind=args.only_kind)
     for line in format_compare(regressions, notes):
         print(line)
     return 1 if regressions else 0

@@ -18,7 +18,7 @@ REAL_SLACK = 3.0        # real-hardware MAPE thresholds get this factor;
 
 
 def compare_docs(baseline: dict, new: dict, rel_tol: float = 0.10,
-                 mape_tol: float = 10.0) -> tuple:
+                 mape_tol: float = 10.0, only_kind: str = None) -> tuple:
     """Return ``(regressions, notes)`` — lists of human-readable strings.
 
     ``rel_tol`` is the allowed relative drop in a geomean speedup (per-
@@ -33,14 +33,28 @@ def compare_docs(baseline: dict, new: dict, rel_tol: float = 0.10,
     run on a shared host, so thresholding them would only produce alert
     fatigue.  Sim configs realize a deterministic schedule and their
     speedups are held to the stated tolerances.
+
+    ``only_kind`` (``"sim"`` | ``"real"``) restricts the comparison to
+    configs of that kind — how CI splits the gate: the deterministic sim
+    half blocks, the host-noise real half only warns.  The ``adaptive``
+    section (simulated by construction) is compared under ``"sim"``.
     """
     regressions, notes = [], []
+    if only_kind not in (None, "sim", "real"):
+        raise ValueError(f"only_kind must be None, 'sim' or 'real', "
+                         f"got {only_kind!r}")
 
     def is_real(cfg: str) -> bool:
         return baseline.get("configs", {}).get(cfg, {}).get("kind") \
             == "real"
 
+    def skip(cfg: str) -> bool:
+        return only_kind is not None and \
+            baseline.get("configs", {}).get(cfg, {}).get("kind") != only_kind
+
     for cfg, g in baseline.get("geomean", {}).items():
+        if skip(cfg):
+            continue
         ng = new.get("geomean", {}).get(cfg)
         if ng is None:
             regressions.append(f"geomean: config {cfg!r} missing from new")
@@ -65,6 +79,8 @@ def compare_docs(baseline: dict, new: dict, rel_tol: float = 0.10,
             regressions.append(f"workload {wname!r} missing from new")
             continue
         for cfg, r in w.get("configs", {}).items():
+            if skip(cfg):
+                continue
             nr = nw.get("configs", {}).get(cfg)
             if nr is None:
                 regressions.append(
@@ -90,6 +106,33 @@ def compare_docs(baseline: dict, new: dict, rel_tol: float = 0.10,
                         f"{wname}[{cfg}].mape.{kernel}: "
                         f"{float(old_m):.1f}% -> {float(new_m):.1f}% "
                         f"(rise > {m_tol:.0f}pp)")
+
+    if only_kind in (None, "sim"):
+        old_ad, new_ad = baseline.get("adaptive"), new.get("adaptive")
+        if old_ad and new_ad:
+            key = "geomean_speedup_vs_static"
+            # single-scenario number over few workloads: same 2x slack the
+            # per-workload speedups get
+            rel_tol = 2.0 * rel_tol
+            old_v, new_v = float(old_ad[key]), float(new_ad[key])
+            if new_v < old_v * (1.0 - rel_tol):
+                regressions.append(
+                    f"adaptive.{key}: {old_v:.3f} -> {new_v:.3f} "
+                    f"(drop > {100 * rel_tol:.0f}%)")
+            elif new_v > old_v * (1.0 + rel_tol):
+                notes.append(f"adaptive.{key}: improved "
+                             f"{old_v:.3f} -> {new_v:.3f}")
+            broken = [n for n, w in new_ad.get("workloads", {}).items()
+                      if not w.get("bit_exact", True)]
+            if broken:
+                regressions.append(
+                    f"adaptive: bit-exactness lost on {sorted(broken)}")
+        elif old_ad and not new_ad:
+            regressions.append("adaptive section missing from new "
+                               "(present in baseline)")
+        elif new_ad and not old_ad:
+            notes.append("adaptive section new (absent in baseline) — "
+                         "not compared")
     return regressions, notes
 
 

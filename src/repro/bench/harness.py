@@ -181,6 +181,166 @@ def _run_workload(built, cfg: dict, reps: int) -> dict:
 
 
 # --------------------------------------------------------------------------
+# the adaptive scenario: mis-seeded predictions, steal + feedback recovery
+# --------------------------------------------------------------------------
+
+ADAPTIVE_TRUE_FLOPS = 1.0e7        # both devices' actual sustained rate
+ADAPTIVE_CLAIMED = {"d0": 1.0e8,   # what d0's tuning cache *claims*: 10x
+                    "d1": 1.0e7}   # the truth, so the EFT piles every node
+#   onto d0 (d1's cache is honest).  The static replay pays that mistake
+#   as d1 idle time.  The adaptive run starts with the same lie — early
+#   decisions see an implausibly light d0 backlog and stay put — but
+#   every completed node feeds its actual duration back, refits pull d0's
+#   model toward the truth, the live load ledger reprices d0's backlog,
+#   and ready tasks start stealing to the idle (honestly-priced) d1
+
+
+def run_adaptive(quick: bool = False, results_dir: str = "results",
+                 device_root: str = None, workloads=None, size: str = None,
+                 trace_name: str = "exec_trace_adaptive.json") -> dict:
+    """The mis-seeded adaptive-vs-static scenario (schema-2 ``adaptive``
+    section).  Two simulated devices with *equal true speed* but wildly
+    skewed seeded predictions run each workload three ways:
+
+    - ``static``   — the async executor replaying the mis-predicted EFT
+      schedule verbatim (fresh mis-seeded caches, no feedback),
+    - ``adaptive`` — the same mis-seeded start, but with runtime
+      re-dispatch (``StealPolicy``) and online feedback (closed-form
+      ``LinearModel`` refits, cheap enough to run inline),
+    - ``replan``   — recompiled *after* the adaptive run, so the EFT plans
+      over the corrected models: the across-runs payoff of the feedback.
+
+    All dispatchers sleep the TRUE time regardless of what they predict
+    (``SkewedSimDispatcher``), so wall clock measures schedule quality.
+    The adaptive run's Chrome trace (steal instants included) is written
+    to ``results_dir/trace_name``.
+    """
+    import json as _json
+
+    from repro.core.nnc import LinearModel
+    from repro.exec import CommModel, StealPolicy, Topology
+    from repro.runtime.online import OnlineConfig
+    from repro.runtime.simdev import (SimFabric, SimLink,
+                                      SkewedSimDispatcher, true_time_at)
+
+    names = list(workloads) if workloads \
+        else ["decode_microbatch", "mixed_dag"]
+    size = size or ("small" if quick else "medium")
+    device_root = device_root or os.path.join(results_dir, "bench_devices")
+
+    registry = suite_registry(names)
+    built = {name: get_workload(name).build(size=size, registry=registry)
+             for name in names}
+    programs = [b.program for b in built.values()]
+
+    link = SimLink(latency_s=2e-4, bytes_per_s=2e9)
+    topology = Topology.shared_bus(sorted(ADAPTIVE_CLAIMED))
+    fabric = SimFabric(topology, link)
+    comm = CommModel(TuningCache(root=os.path.join(device_root,
+                                                   "adaptive-comm")))
+    link.measure_into(comm, [(a, b) for a in ADAPTIVE_CLAIMED
+                             for b in ADAPTIVE_CLAIMED if a != b])
+
+    def fresh_devices(tag: str) -> dict:
+        """Mis-seeded caches + true-time dispatchers, fresh per scenario
+        leg so feedback from one leg never flatters another."""
+        true_time = true_time_at(registry, ADAPTIVE_TRUE_FLOPS)
+        out = {}
+        for name, claimed in ADAPTIVE_CLAIMED.items():
+            fp = Fingerprint("sim", f"adaptive-{tag}-{name}", 1, 1,
+                             ("float32",))
+            cache = TuningCache(root=os.path.join(device_root, "adaptive"),
+                                fingerprint=fp)
+            seed_from_programs(Dispatcher(registry=registry, cache=cache),
+                               programs, claimed, amplitude=SIM_AMPLITUDE,
+                               reset=True)
+            out[name] = SkewedSimDispatcher(registry=registry, cache=cache,
+                                            true_time=true_time)
+        return out
+
+    # closed-form refits are microseconds, so refit on every observation
+    # and fit over a short trailing window — the appended truth outweighs
+    # the mis-seeded rows within a handful of nodes
+    online = OnlineConfig(refit_every=1, budget_rows=2,
+                          model_factory=LinearModel, save=False)
+    section = {"devices": {n: {"claimed_flops_per_s": c,
+                               "true_flops_per_s": ADAPTIVE_TRUE_FLOPS}
+                           for n, c in ADAPTIVE_CLAIMED.items()},
+               "workloads": {}, "size": size}
+    last_trace = None
+    reps = 2                       # min-of-k per leg: sleeps realize the
+    #   schedule deterministically, reps only shave host-noise outliers
+    for name, b in built.items():
+        common = dict(bindings=b.bindings, comm=comm,
+                      transfer=fabric.transfer, topology=topology)
+        c_static = b.program.compile(devices=fresh_devices(f"{name}-s"),
+                                     executor="async", **common)
+        walls = []
+        for _ in range(reps):      # the static replay never refits, so
+            t0 = time.perf_counter()   # repeated runs replay identically
+            out_static = c_static()
+            walls.append(time.perf_counter() - t0)
+        wall_static = min(walls)
+
+        # the adaptive leg mutates its models as it runs — every rep gets
+        # a fresh mis-seeded start so each measures THE mis-seeded run
+        walls, n_steals, refits = [], 0, 0
+        for r in range(reps):
+            c_adapt = b.program.compile(
+                devices=fresh_devices(f"{name}-a{r}"), executor="adaptive",
+                steal=StealPolicy(), online=online, **common)
+            if r == 0:             # the bit-exact sequential reference
+                out_ref = c_adapt(_executor="sequential")
+            t0 = time.perf_counter()
+            out_adapt = c_adapt()
+            walls.append(time.perf_counter() - t0)
+            last_trace = c_adapt.last_trace
+            n_steals = len(last_trace.steals())
+            refits = sum(sum(rr.refits.values())
+                         for rr in c_adapt.refiners.values())
+        wall_adapt = min(walls)
+
+        # recompile over the feedback-corrected caches: the EFT now plans
+        # with (approximately) true per-device times
+        c_replan = b.program.compile(devices=c_adapt.dispatchers,
+                                     executor="async", **common)
+        walls = []
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            c_replan()
+            walls.append(time.perf_counter() - t0)
+        wall_replan = min(walls)
+
+        def _tup(v):
+            return v if isinstance(v, tuple) else (v,)
+        bit_exact = all(np.array_equal(np.asarray(a), np.asarray(r))
+                        for a, r in zip(_tup(out_adapt), _tup(out_ref))) \
+            and all(np.array_equal(np.asarray(a), np.asarray(r))
+                    for a, r in zip(_tup(out_static), _tup(out_ref)))
+        section["workloads"][name] = {
+            "static_wall_s": float(wall_static),
+            "adaptive_wall_s": float(wall_adapt),
+            "replan_wall_s": float(wall_replan),
+            "speedup_vs_static": wall_static / max(wall_adapt, 1e-12),
+            "replan_speedup_vs_static": wall_static / max(wall_replan,
+                                                          1e-12),
+            "n_steals": int(n_steals),
+            "refits": int(refits),
+            "bit_exact": bool(bit_exact),
+        }
+
+    section["geomean_speedup_vs_static"] = _geomean(
+        [w["speedup_vs_static"] for w in section["workloads"].values()])
+    if last_trace is not None:
+        os.makedirs(results_dir, exist_ok=True)
+        trace_path = os.path.join(results_dir, trace_name)
+        with open(trace_path, "w") as f:
+            _json.dump(last_trace.to_chrome(), f, indent=1)
+        section["trace_path"] = trace_path
+    return section
+
+
+# --------------------------------------------------------------------------
 # external artifact folding (the unified-schema satellite)
 # --------------------------------------------------------------------------
 
@@ -239,7 +399,7 @@ def fold_external(results_dir: str) -> dict:
 def run_bench(quick: bool = False, out_path: str = "results/bench.json",
               results_dir: str = "results", device_root: str = None,
               workloads=None, size: str = None, reps: int = None,
-              configs=DEFAULT_CONFIGS) -> dict:
+              configs=DEFAULT_CONFIGS, adaptive: bool = None) -> dict:
     names = list(workloads) if workloads else workload_names()
     size = size or ("small" if quick else "medium")
     reps = reps or (3 if quick else 5)
@@ -291,6 +451,9 @@ def run_bench(quick: bool = False, out_path: str = "results/bench.json",
         "geomean": geomean,
         "external": fold_external(results_dir),
     }
+    if adaptive or (adaptive is None and "simdev2" in configs):
+        doc["adaptive"] = run_adaptive(quick=quick, results_dir=results_dir,
+                                       device_root=device_root, size=size)
     validate_bench(doc)
     os.makedirs(os.path.dirname(out_path) or ".", exist_ok=True)
     tmp = out_path + ".tmp"
@@ -332,6 +495,24 @@ def summarize(doc: dict) -> list:
         lines.append(f"{'geomean':20s} {'':5s} {'':5s} {'':9s} {'':8s} "
                      f"{'':8s} {g['speedup_vs_default']:6.2f}x "
                      f"{g['speedup_vs_worst']:7.2f}x")
+    ad = doc.get("adaptive")
+    if ad:
+        lines.append("-- adaptive (mis-seeded steal + feedback vs static "
+                     "replay) --")
+        lines.append(f"{'workload':20s} {'static_ms':>10s} {'adapt_ms':>9s} "
+                     f"{'replan_ms':>10s} {'speedup':>8s} {'steals':>6s} "
+                     f"{'refits':>6s} {'exact':>5s}")
+        for name in sorted(ad["workloads"]):
+            w = ad["workloads"][name]
+            lines.append(
+                f"{name:20s} {w['static_wall_s'] * 1e3:10.1f} "
+                f"{w['adaptive_wall_s'] * 1e3:9.1f} "
+                f"{w['replan_wall_s'] * 1e3:10.1f} "
+                f"{w['speedup_vs_static']:7.2f}x "
+                f"{w['n_steals']:6d} {w['refits']:6d} "
+                f"{'yes' if w['bit_exact'] else 'NO':>5s}")
+        lines.append(f"{'geomean':20s} {'':10s} {'':9s} {'':10s} "
+                     f"{ad['geomean_speedup_vs_static']:7.2f}x")
     ext = doc.get("external", {})
     ro = ext.get("runtime_overhead")
     # fields may be None when the folded artifact was partial/degenerate

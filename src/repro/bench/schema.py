@@ -32,12 +32,29 @@ Document shape (schema 1)::
                              "speedup_vs_worst": float}},
       "external": {...}                   # folded sibling artifacts, or {}
     }
+
+Schema 2 adds one *optional* top-level section — documents without it
+(and whole schema-1 documents) stay loadable, so ``bench compare`` works
+across the version bump::
+
+      "adaptive": {                       # mis-seeded adaptive-vs-static
+        "size": str,
+        "devices": {dev: {"claimed_flops_per_s": float,
+                           "true_flops_per_s": float}},
+        "workloads": {name: {
+          "static_wall_s"|"adaptive_wall_s"|"replan_wall_s": float,
+          "speedup_vs_static": float,     # static wall / adaptive wall
+          "replan_speedup_vs_static": float,
+          "n_steals": int, "refits": int, "bit_exact": bool}},
+        "geomean_speedup_vs_static": float,
+        "trace_path": str}                # Chrome trace of the adaptive run
 """
 from __future__ import annotations
 
 import json
 
-BENCH_SCHEMA_VERSION = 1
+BENCH_SCHEMA_VERSION = 2
+ACCEPTED_SCHEMAS = (1, 2)
 MODES = ("best", "default", "worst")
 
 
@@ -59,9 +76,9 @@ def _num(doc, path, key, lo=None):
 def validate_bench(doc: dict) -> dict:
     """Raise ValueError on a structurally invalid document; return it."""
     _require(isinstance(doc, dict), "$", "expected an object")
-    _require(doc.get("schema") == BENCH_SCHEMA_VERSION, "$.schema",
+    _require(doc.get("schema") in ACCEPTED_SCHEMAS, "$.schema",
              f"unknown bench schema {doc.get('schema')!r} "
-             f"(this build reads {BENCH_SCHEMA_VERSION})")
+             f"(this build reads {ACCEPTED_SCHEMAS})")
     _require(isinstance(doc.get("quick"), bool), "$.quick", "expected bool")
     _num(doc, "$", "generated_unix", lo=0)
     _require(isinstance(doc.get("host_fingerprint"), dict),
@@ -131,6 +148,30 @@ def validate_bench(doc: dict) -> dict:
 
     _require(isinstance(doc.get("external"), dict), "$.external",
              "expected an object")
+
+    ad = doc.get("adaptive")
+    if ad is not None:                  # optional, schema-2 only
+        _require(doc["schema"] >= 2, "$.adaptive",
+                 "adaptive section requires schema >= 2")
+        _require(isinstance(ad, dict), "$.adaptive", "expected an object")
+        _require(isinstance(ad.get("devices"), dict) and ad["devices"],
+                 "$.adaptive.devices", "expected a non-empty object")
+        for dev, d in ad["devices"].items():
+            dp = f"$.adaptive.devices.{dev}"
+            _num(d, dp, "claimed_flops_per_s", lo=0)
+            _num(d, dp, "true_flops_per_s", lo=0)
+        _require(isinstance(ad.get("workloads"), dict) and ad["workloads"],
+                 "$.adaptive.workloads", "expected a non-empty object")
+        for name, w in ad["workloads"].items():
+            wp = f"$.adaptive.workloads.{name}"
+            for key in ("static_wall_s", "adaptive_wall_s", "replan_wall_s",
+                        "speedup_vs_static", "replan_speedup_vs_static"):
+                _num(w, wp, key, lo=0)
+            _num(w, wp, "n_steals", lo=0)
+            _num(w, wp, "refits", lo=0)
+            _require(isinstance(w.get("bit_exact"), bool),
+                     f"{wp}.bit_exact", "expected bool")
+        _num(ad, "$.adaptive", "geomean_speedup_vs_static", lo=0)
     return doc
 
 

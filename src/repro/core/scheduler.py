@@ -38,7 +38,8 @@ def schedule(tasks: Sequence[KernelTask],
              predict: Callable[[KernelTask, str], float],
              devices: Sequence[str],
              comm: Optional[Callable[[str, str, float], float]] = None,
-             input_homes: Optional[dict] = None
+             input_homes: Optional[dict] = None,
+             topology=None
              ) -> dict[str, Assignment]:
     """predict(task, device) -> seconds.  Returns task -> Assignment.
 
@@ -50,6 +51,15 @@ def schedule(tasks: Sequence[KernelTask],
     ``repro.exec.buffers.plan_buffers`` will materialize, and a placement
     that looks fast compute-wise loses when it forces the bytes across a
     slow link.
+
+    With a ``repro.exec.Topology`` the links are *contended*: each
+    transfer additionally waits for a free lane of the shared bus carrying
+    its (src, dst) pair, and occupies that lane for its predicted
+    duration — two same-bus transfers serialize in the schedule exactly as
+    they will on the executor's bus-lane workers, while pairs on
+    different buses (or pairs no bus covers) still overlap freely.  Bus
+    lanes are claimed in greedy scheduling order — the same approximation
+    the rest of the EFT already makes.
 
     Program *inputs* are priced the same way: each task's ``input_deps``
     names the input payloads it reads.  An input's home is pinned to the
@@ -68,6 +78,38 @@ def schedule(tasks: Sequence[KernelTask],
     device_free = {d: 0.0 for d in devices}
     input_home: dict[str, str] = \
         input_homes if input_homes is not None else {}
+    bus_free: dict[str, list] = {}      # bus name -> per-lane free times
+
+    def arrival(src: str, dst: str, nbytes: float, ready_s: float,
+                bus_state: dict) -> float:
+        """When the payload lands on dst: predicted duration on the pair's
+        pseudo-kernel, queued behind ``bus_state``'s lane availability."""
+        dur = comm(src, dst, nbytes)
+        bus = topology.bus_of(src, dst) if topology is not None else None
+        if bus is None:
+            return ready_s + dur
+        lanes = bus_state.setdefault(bus.name, [0.0] * bus.lanes)
+        i = min(range(len(lanes)), key=lanes.__getitem__)
+        start = max(ready_s, lanes[i])
+        lanes[i] = start + dur
+        return start + dur
+
+    def earliest_start(task: KernelTask, dev: str, bus_state: dict) -> float:
+        start = device_free[dev]
+        for d in task.deps:
+            avail = done[d].finish
+            if comm is not None and done[d].device != dev:
+                avail = arrival(done[d].device, dev, producer[d].out_bytes,
+                                done[d].finish, bus_state)
+            start = max(start, avail)
+        if comm is not None:
+            for iname, nbytes in task.input_deps:
+                home = input_home.get(iname)
+                if home is not None and home != dev:
+                    start = max(start, arrival(home, dev, nbytes, 0.0,
+                                               bus_state))
+        return start
+
     remaining = list(tasks)
     while remaining:
         ready = [t for t in remaining if all(d in done for d in t.deps)]
@@ -79,23 +121,15 @@ def schedule(tasks: Sequence[KernelTask],
         task = ready[0]
         best = None
         for dev in devices:
-            t_pred = predict(task, dev)
-            start = device_free[dev]
-            for d in task.deps:
-                avail = done[d].finish
-                if comm is not None and done[d].device != dev:
-                    avail += comm(done[d].device, dev,
-                                  producer[d].out_bytes)
-                start = max(start, avail)
-            if comm is not None:
-                for iname, nbytes in task.input_deps:
-                    home = input_home.get(iname)
-                    if home is not None and home != dev:
-                        start = max(start, comm(home, dev, nbytes))
-            finish = start + t_pred
+            # candidates probe a copy of the bus lanes; only the chosen
+            # device's transfers actually claim them below
+            trial = {k: list(v) for k, v in bus_free.items()}
+            start = earliest_start(task, dev, trial)
+            finish = start + predict(task, dev)
             if best is None or finish < best[1].finish:
                 best = (dev, Assignment(dev, start, finish))
         dev, assign = best
+        earliest_start(task, dev, bus_free)     # commit bus lane claims
         device_free[dev] = assign.finish
         done[task.name] = assign
         if comm is not None:

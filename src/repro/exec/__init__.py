@@ -1,17 +1,19 @@
 """repro.exec — asynchronous multi-device execution with transfer-aware
-scheduling.
+scheduling and runtime re-dispatch.
 
 The layer that turns a placement plan into concurrent execution: explicit
 buffer placement and ``Transfer`` tasks (``buffers``), a per-device-pair
-bytes->seconds cost model persisted in the tuning cache (``comm``), a
-dependency-driven per-lane threaded executor (``executor``), and a
-begin/end/device trace exportable as Chrome ``trace_event`` JSON or Gantt
-CSV (``trace``).  ``repro.api.CompiledProgram(..., executor="async")`` is
-the front door; the sequential bridge stays as the bit-exact reference.
+bytes->seconds cost model plus shared-bus ``Topology`` persisted in the
+tuning cache (``comm``), a dependency-driven per-lane threaded executor
+with predictor-consulted work stealing (``executor``), and a
+begin/end/device trace — including steal events — exportable as Chrome
+``trace_event`` JSON or Gantt CSV (``trace``).
+``repro.api.CompiledProgram(..., executor="async"|"adaptive")`` is the
+front door; the sequential bridge stays as the bit-exact reference.
 """
 from repro.exec.buffers import (BufferTable, Transfer, plan_buffers,
                                 value_nbytes)
-from repro.exec.comm import (DEFAULT_SIZES, TRANSFER_FEATURES, CommModel,
-                             transfer_kernel)
-from repro.exec.executor import AsyncExecutor, ExecTask
+from repro.exec.comm import (DEFAULT_SIZES, TRANSFER_FEATURES, Bus,
+                             CommModel, Topology, transfer_kernel)
+from repro.exec.executor import AsyncExecutor, ExecTask, StealPolicy
 from repro.exec.trace import ExecutionTrace, TraceEvent

@@ -29,6 +29,7 @@ class Transfer:
     src: str                    # home device
     dst: str                    # consumer device
     nbytes: int
+    bus: Optional[str] = None   # shared bus carrying this pair (topology)
 
     @property
     def name(self) -> str:
@@ -36,8 +37,12 @@ class Transfer:
 
     @property
     def lane(self) -> str:
-        """The link lane that carries this transfer (the executor runs one
-        worker per lane, so copies overlap with both endpoints' compute)."""
+        """The lane that carries this transfer: the shared bus when a
+        topology covers the pair (same-bus copies queue on its workers),
+        else a dedicated point-to-point link lane (copies overlap with
+        both endpoints' compute)."""
+        if self.bus is not None:
+            return f"bus:{self.bus}"
         return f"{self.src}->{self.dst}"
 
 
@@ -60,7 +65,8 @@ class BufferTable:
 
 
 def plan_buffers(program, assignments,
-                 input_homes: Optional[dict] = None) -> BufferTable:
+                 input_homes: Optional[dict] = None,
+                 topology=None) -> BufferTable:
     """Derive the placement table and transfer list for a scheduled program.
 
     ``assignments`` is the scheduler's node -> Assignment map.
@@ -72,7 +78,9 @@ def plan_buffers(program, assignments,
     consumer's device (ties broken by node order); an input no node
     consumes (a passthrough output) stays on the first device seen.
     Transfers are emitted for every edge whose consumer runs away from
-    the value's home, one per (value, dst).
+    the value's home, one per (value, dst); with a ``repro.exec.Topology``
+    each transfer is labelled with the shared bus carrying its pair, so
+    its executor lane (and hence contention) follows the topology.
     """
     placements: dict = {}
     for node in program.nodes:
@@ -106,6 +114,8 @@ def plan_buffers(program, assignments,
                 continue
             seen.add((dep, dst))
             aval = avals[dep]
+            bus = topology.bus_of(src, dst) if topology is not None else None
             transfers.append(Transfer(dep, src, dst,
-                                      value_nbytes(aval.shape, aval.dtype)))
+                                      value_nbytes(aval.shape, aval.dtype),
+                                      bus=bus.name if bus else None))
     return BufferTable(placements=placements, transfers=tuple(transfers))

@@ -1,4 +1,4 @@
-"""Bytes -> seconds inter-device transfer cost model.
+"""Bytes -> seconds inter-device transfer cost model + bus topology.
 
 Transfers are predicted exactly like kernels: each (src, dst) device pair
 is a *pseudo-kernel* in the runtime tuning cache (the ``decode_step``
@@ -10,9 +10,21 @@ log space — persists next to the kernel models, so a re-compiled program
 on the same fingerprint prices its links without re-measuring, and the
 comm-aware EFT scheduler (``core.scheduler.schedule(..., comm=)``) reads
 predicted transfer seconds from the same cache state execution will.
+
+``Topology`` models the *shared* part of real interconnects (PCIe tree /
+NVLink fabric): named buses, each attaching a set of devices with a lane
+capacity.  A transfer between two devices on the same bus occupies one of
+its lanes for the predicted duration — so same-bus transfers serialize
+once the lanes are full (in the EFT via per-lane free times, at run time
+via one executor worker per lane), while pairs on different buses overlap
+freely.  Per-transfer *duration* still comes from the (src, dst) pseudo-
+kernel above; a broadcast fanning one value out to k devices is therefore
+priced as k pair transfers (one pseudo-kernel prediction each) queued on
+their buses — contention, not a magic multicast.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Callable, Optional, Sequence
 
 import numpy as np
@@ -25,6 +37,67 @@ TRANSFER_FEATURES = ("bytes",)
 # payload sweep for measure_pair: small enough to stay fast, wide enough
 # (3 decades) that the log-space fit separates latency from bandwidth
 DEFAULT_SIZES = (1 << 12, 1 << 15, 1 << 18, 1 << 21)
+
+
+@dataclasses.dataclass(frozen=True)
+class Bus:
+    """One shared interconnect segment: ``lanes`` concurrent transfers
+    among ``devices``; further same-bus transfers queue."""
+    name: str
+    devices: tuple
+    lanes: int = 1
+
+    @property
+    def lane(self) -> str:
+        """The executor lane name for this bus."""
+        return f"bus:{self.name}"
+
+
+class Topology:
+    """Which bus carries each device pair.  Pairs no bus covers fall back
+    to a dedicated point-to-point lane (the pre-topology behaviour)."""
+
+    def __init__(self, buses: Sequence[Bus]):
+        names = [b.name for b in buses]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate bus names in {names}")
+        for b in buses:
+            if b.lanes < 1:
+                raise ValueError(f"bus {b.name!r}: lanes must be >= 1")
+        self.buses = tuple(buses)
+
+    def bus_of(self, src: str, dst: str) -> Optional[Bus]:
+        """The first bus attaching both endpoints (declaration order is
+        priority order), or None for an uncovered pair."""
+        for b in self.buses:
+            if src in b.devices and dst in b.devices:
+                return b
+        return None
+
+    def lane_of(self, src: str, dst: str) -> str:
+        b = self.bus_of(src, dst)
+        return b.lane if b is not None else f"{src}->{dst}"
+
+    def lane_widths(self) -> dict:
+        """Executor lane -> worker count (bus lanes with capacity > 1 get
+        that many concurrent workers)."""
+        return {b.lane: b.lanes for b in self.buses}
+
+    @classmethod
+    def shared_bus(cls, devices: Sequence[str], name: str = "pcie0",
+                   lanes: int = 1) -> "Topology":
+        """PCIe-tree-style: every device hangs off one root complex, all
+        transfers share its ``lanes``."""
+        return cls([Bus(name, tuple(devices), lanes)])
+
+    @classmethod
+    def point_to_point(cls, devices: Sequence[str],
+                       lanes: int = 1) -> "Topology":
+        """NVLink-style: a dedicated bus per device pair (both directions
+        share it — a full-duplex fabric would use two)."""
+        devs = sorted(devices)
+        return cls([Bus(f"{a}--{b}", (a, b), lanes)
+                    for i, a in enumerate(devs) for b in devs[i + 1:]])
 
 
 def transfer_kernel(src: str, dst: str) -> str:

@@ -1,6 +1,8 @@
-"""Dependency-driven asynchronous multi-device executor.
+"""Dependency-driven asynchronous multi-device executor with optional
+runtime re-dispatch (work stealing).
 
-One worker thread per lane (device or link), each draining a priority
+One worker per lane slot (device, point-to-point link, or shared-bus
+lane — buses with capacity k get k workers), each draining a priority
 queue ordered by predicted start time.  A task becomes *ready* the moment
 its last dependency completes — not when its turn arrives in the global
 start-time order — so a slow early task on one device never blocks an
@@ -9,11 +11,30 @@ sequential ``run_schedule`` bridge cannot express.  Every task's output is
 a future; dependents read dependency values through the environment
 mapping (resolved futures, so reads never block).
 
-The executor is deliberately generic: it runs ``ExecTask``s, not program
-nodes.  ``repro.api.CompiledProgram`` lowers its scheduled DAG — compute
-nodes on their assigned devices plus the ``buffers.plan_buffers`` transfer
-tasks on their link lanes — into this form; tests drive it directly with
-hand-built graphs.
+**Adaptive mode** (``steal=StealPolicy(...)``): when a ready task's
+planned device is loaded, the executor consults the task's *predictor*
+(``task.predict(device)`` — live, so online refits change later
+decisions) and the shared ``comm`` model to ask whether moving the inputs
+and running on another device beats waiting for the planned slot:
+
+    steal to d  iff  load(d) + move(inputs -> d) + run(d)
+                     <  load(planned) + run(planned)   [by min_advantage]
+
+``load`` is the lane's predicted backlog: queued tasks' predicted
+durations plus the *remaining* predicted time of whatever is running —
+repriced live through each task's predictor at every decision, so an
+online refit immediately changes how loaded every lane looks.
+Move cost prices every task input whose home is not ``d`` through the
+same ``comm(src, dst, nbytes)`` the EFT scheduler used, so plans and
+runtime decisions never disagree about what a byte costs.  A stolen task
+runs via ``task.run_on(env, device)`` (which pays the physical input
+moves) and the trace records a ``"steal"`` event.
+
+The executor stays deliberately generic: it runs ``ExecTask``s, not
+program nodes.  ``repro.api.CompiledProgram`` lowers its scheduled DAG —
+compute nodes on their assigned devices plus the ``buffers.plan_buffers``
+transfer tasks on their bus/link lanes — into this form; tests drive it
+directly with hand-built graphs.
 """
 from __future__ import annotations
 
@@ -31,13 +52,37 @@ from repro.exec.trace import ExecutionTrace
 @dataclasses.dataclass(frozen=True)
 class ExecTask:
     """One schedulable unit: runs ``fn(env)`` on lane ``device`` once every
-    dep has completed; ``env[dep]`` is the dep's output."""
+    dep has completed; ``env[dep]`` is the dep's output.  The optional
+    adaptive fields let the executor re-dispatch the task at run time:
+    all three of ``run_on``/``runnable_on``/``predict`` must be set for a
+    task to be steal-eligible (static tasks leave the defaults)."""
     name: str
     device: str
     fn: Callable[[Mapping], object]
     deps: tuple = ()
     kind: str = "compute"           # "compute" | "transfer" (trace category)
     priority: float = 0.0           # predicted start; orders a lane's queue
+    # -- adaptive metadata ---------------------------------------------------
+    run_on: Optional[Callable[[Mapping, str], object]] = None
+    #   device-parameterized body; pays input moves when device != planned
+    runnable_on: tuple = ()         # devices this task may re-dispatch to
+    predict: Optional[Callable[[str], float]] = None
+    #   device -> predicted seconds, consulted at decision time
+    inputs: tuple = ()              # (value, home device, nbytes) triples
+    #   priced through comm when running away from the inputs' homes
+
+
+@dataclasses.dataclass(frozen=True)
+class StealPolicy:
+    """When may a ready task leave its planned device?
+
+    ``min_advantage`` is the required relative predicted win (0.0 keeps
+    the pure "move+run beats the planned wait" rule); ``idle_only``
+    restricts candidate devices to ones with zero predicted load, the
+    conservative default that can never delay the target device's own
+    planned work."""
+    min_advantage: float = 0.0
+    idle_only: bool = True
 
 
 class _Env:
@@ -58,12 +103,26 @@ _SENTINEL_PRIORITY = float("inf")
 
 
 class AsyncExecutor:
-    """Runs a task graph across per-lane worker threads."""
+    """Runs a task graph across per-lane worker threads.
+
+    ``steal`` enables runtime re-dispatch (see module docstring); ``comm``
+    is the ``(src, dst, nbytes) -> seconds`` pricing steal moves (None
+    prices moves at zero); ``observe(task, device, seconds)`` is called
+    after every completed compute task — the online-feedback hook
+    ``repro.api`` wires to ``runtime.online.OnlineRefiner.observe``.
+    """
 
     def __init__(self, tracer: Optional[ExecutionTrace] = None,
-                 clock: Callable[[], float] = time.perf_counter):
+                 clock: Callable[[], float] = time.perf_counter,
+                 steal: Optional[StealPolicy] = None,
+                 comm: Optional[Callable[[str, str, float], float]] = None,
+                 observe: Optional[Callable[[ExecTask, str, float],
+                                            None]] = None):
         self.tracer = tracer
         self.clock = clock
+        self.steal = steal
+        self.comm = comm
+        self.observe = observe
 
     # -- validation ----------------------------------------------------------
     @staticmethod
@@ -97,11 +156,50 @@ class AsyncExecutor:
             stuck = sorted(n for n, c in pending.items() if c > 0)
             raise ValueError(f"dependency cycle among tasks {stuck}")
 
+    # -- the steal decision --------------------------------------------------
+    def _move_cost(self, task: ExecTask, device: str) -> float:
+        if self.comm is None:
+            return 0.0
+        return sum(self.comm(home, device, nbytes)
+                   for _, home, nbytes in task.inputs if home != device)
+
+    def decide_device(self, task: ExecTask, load: Mapping[str, float]) -> str:
+        """Pure decision rule: the device the task should run on given the
+        current predicted per-device load (exposed for direct testing)."""
+        if (self.steal is None or task.run_on is None
+                or task.predict is None or not task.runnable_on):
+            return task.device
+        planned = task.device
+        planned_cost = load.get(planned, 0.0) + task.predict(planned)
+        best_dev, best_cost = planned, planned_cost
+        for dev in task.runnable_on:
+            if dev == planned:
+                continue
+            dev_load = load.get(dev, 0.0)
+            if self.steal.idle_only and dev_load > 0.0:
+                continue
+            try:
+                cost = dev_load + self._move_cost(task, dev) \
+                    + task.predict(dev)
+            except Exception:
+                # unpriceable candidate (e.g. cold comm pair, no model for
+                # this kernel on that device) — never steal blind
+                continue
+            if cost < best_cost:
+                best_dev, best_cost = dev, cost
+        if best_dev != planned \
+                and best_cost < planned_cost * (1.0 - self.steal.min_advantage):
+            return best_dev
+        return planned
+
     # -- execution -----------------------------------------------------------
-    def run(self, tasks: Sequence[ExecTask]) -> dict:
-        """Execute the graph; returns name -> output.  The first task
-        exception aborts the run (not-yet-started tasks are skipped) and
-        re-raises in the caller."""
+    def run(self, tasks: Sequence[ExecTask],
+            lane_width: Optional[Mapping[str, int]] = None) -> dict:
+        """Execute the graph; returns name -> output.  ``lane_width`` maps
+        lane -> concurrent worker count (default 1 — buses with capacity k
+        pass k).  The first task exception aborts the run: not-yet-started
+        tasks are skipped and their futures *cancelled* (so nothing ever
+        blocks on them) and the original error re-raises in the caller."""
         tasks = list(tasks)
         if not tasks:
             return {}
@@ -120,20 +218,65 @@ class AsyncExecutor:
         abort = threading.Event()
         state = {"pending": {t.name: len(t.deps) for t in tasks},
                  "n_done": 0, "error": None, "seq": 0}
-        lanes = sorted({t.device for t in tasks})
+        lanes = {t.device for t in tasks}
+        if self.steal is not None:
+            for t in tasks:
+                lanes.update(t.runnable_on)
+        lanes = sorted(lanes)
         queues: dict = {lane: queue.PriorityQueue() for lane in lanes}
+        # predicted load ledger (adaptive mode): per lane, the queued-not-
+        # yet-started tasks and the running one.  Estimates are *live*
+        # closures over task.predict, re-evaluated at every decision — so
+        # an online refit immediately reprices the whole backlog, which is
+        # how execution feedback changes later steal decisions mid-run (a
+        # snapshot taken at enqueue time would keep lying until the queue
+        # drained).
+        queued: dict = {lane: {} for lane in lanes}   # lane -> {name: est fn}
+        running: dict = {}              # task name -> (lane, est fn, t_start)
+
+        def _est_fn(task: ExecTask, lane: str):
+            if task.predict is None:    # transfers / non-adaptive tasks
+                return lambda: 0.0
+            return lambda: task.predict(lane)
+
+        def _safe(fn) -> float:
+            try:
+                return float(fn())
+            except Exception:
+                return 0.0
+
+        def _load(now: float) -> dict:
+            out = {lane: 0.0 for lane in queued}
+            for lane, ests in queued.items():
+                for fn in ests.values():
+                    out[lane] += _safe(fn)
+            for _, (lane, fn, t0) in running.items():
+                out[lane] = out.get(lane, 0.0) \
+                    + max(0.0, _safe(fn) - (now - t0))
+            return out
 
         def enqueue(task: ExecTask) -> None:
+            now = self.clock()
             with lock:
                 state["seq"] += 1
                 seq = state["seq"]
-            queues[task.device].put((task.priority, seq, task))
+                lane = self.decide_device(task, _load(now)) \
+                    if self.steal is not None else task.device
+                queued[lane][task.name] = _est_fn(task, lane)
+            if lane != task.device and self.tracer is not None:
+                self.tracer.record(f"steal:{task.name}", "steal", lane,
+                                   now, now, note=f"{task.device}->{lane}")
+            queues[lane].put((task.priority, seq, task))
 
         def complete(task: ExecTask, value) -> None:
-            futures[task.name].set_result(value)
+            try:
+                futures[task.name].set_result(value)
+            except Exception:           # future cancelled by a racing abort
+                return
             ready = []
             with lock:
                 state["n_done"] += 1
+                running.pop(task.name, None)
                 for s in succ[task.name]:
                     state["pending"][s] -= 1
                     if state["pending"][s] == 0:
@@ -145,10 +288,14 @@ class AsyncExecutor:
                 done.set()
 
         def fail(task: ExecTask, exc: BaseException) -> None:
-            futures[task.name].set_exception(exc)
+            try:
+                futures[task.name].set_exception(exc)
+            except Exception:
+                pass
             with lock:
                 if state["error"] is None:
                     state["error"] = exc
+                running.pop(task.name, None)
             abort.set()
             done.set()
 
@@ -158,32 +305,61 @@ class AsyncExecutor:
                 _, _, task = q.get()
                 if task is None:
                     return
+                with lock:
+                    est = queued[lane].pop(task.name, None)
+                    if not abort.is_set():
+                        running[task.name] = (lane, est or (lambda: 0.0),
+                                              self.clock())
                 if abort.is_set():
+                    # abort cleanup: a skipped task's future must never be
+                    # awaited into a hang — cancel it so readers raise
+                    futures[task.name].cancel()
                     continue
+                stolen = lane != task.device
                 t0 = self.clock()
                 try:
-                    value = task.fn(env)
+                    if stolen:
+                        value = task.run_on(env, lane)
+                    else:
+                        value = task.fn(env)
                 except BaseException as exc:  # noqa: BLE001 — re-raised in run()
                     fail(task, exc)
                     continue
                 t1 = self.clock()
                 if self.tracer is not None:
-                    self.tracer.record(task.name, task.kind, lane, t0, t1)
+                    self.tracer.record(task.name, task.kind, lane, t0, t1,
+                                       note=f"stolen:{task.device}->{lane}"
+                                       if stolen else "")
+                if self.observe is not None and task.kind == "compute":
+                    try:
+                        self.observe(task, lane, t1 - t0)
+                    except BaseException as exc:  # noqa: BLE001
+                        fail(task, exc)
+                        continue
                 complete(task, value)
 
-        workers = [threading.Thread(target=worker, args=(lane,),
-                                    name=f"exec-{lane}", daemon=True)
-                   for lane in lanes]
-        for w in workers:
+        widths = dict(lane_width or {})
+        workers = [(lane, threading.Thread(target=worker, args=(lane,),
+                                           name=f"exec-{lane}-{i}",
+                                           daemon=True))
+                   for lane in lanes
+                   for i in range(max(1, int(widths.get(lane, 1))))]
+        for _, w in workers:
             w.start()
         for t in sorted(tasks, key=lambda t: t.priority):
             if not t.deps:
                 enqueue(t)
         done.wait()
-        for lane in lanes:
+        for lane, _ in workers:         # one sentinel per worker thread
             queues[lane].put((_SENTINEL_PRIORITY, 0, None))
-        for w in workers:
+        for _, w in workers:
             w.join()
         if state["error"] is not None:
+            # cancel every future the abort left unresolved: a dependent
+            # (or CompiledProgram.__call__) blocked on one would hang
+            # forever instead of seeing the original error
+            for fut in futures.values():
+                if not fut.done():
+                    fut.cancel()
             raise state["error"]
         return {name: futures[name].result() for name in futures}

@@ -2,13 +2,18 @@
 
 Every executor run (async *and* the sequential bridge) records one
 ``TraceEvent`` per task — compute nodes and explicit transfer tasks alike —
-with wall-clock begin/end and the lane that ran it.  The trace exports to
-two formats: Chrome ``trace_event`` JSON (open in ``chrome://tracing`` or
-Perfetto; one row per device/link lane, so compute/transfer overlap is
-visible at a glance) and a Gantt CSV shaped like the predicted-schedule
-CSV ``repro.api.export.gantt_csv`` emits (task/device/start/finish line
-up; column 2 is the event *kind* here vs the kernel name there), so
-predicted and actual timelines sit side by side.
+with wall-clock begin/end and the lane that ran it.  The adaptive executor
+additionally records zero-duration ``"steal"`` events (one per runtime
+re-dispatch, ``note`` = ``planned->actual``) and annotates stolen compute
+events and their inline input moves, so a trace answers *why* a task ran
+somewhere other than its planned device.  The trace exports to two
+formats: Chrome ``trace_event`` JSON (open in ``chrome://tracing`` or
+Perfetto; one row per device/link/bus lane, steals as instant events, so
+compute/transfer overlap is visible at a glance) and a Gantt CSV shaped
+like the predicted-schedule CSV ``repro.api.export.gantt_csv`` emits
+(task/device/start/finish line up; column 2 is the event *kind* here vs
+the kernel name there), so predicted and actual timelines sit side by
+side.
 """
 from __future__ import annotations
 
@@ -20,10 +25,11 @@ import threading
 @dataclasses.dataclass(frozen=True)
 class TraceEvent:
     name: str
-    kind: str                   # "compute" | "transfer"
-    device: str                 # device name or "src->dst" link lane
+    kind: str                   # "compute" | "transfer" | "steal"
+    device: str                 # device name, "src->dst" link or "bus:" lane
     begin_s: float
     end_s: float
+    note: str = ""              # steal annotation ("planned->actual", ...)
 
     @property
     def dur_s(self) -> float:
@@ -38,10 +44,10 @@ class ExecutionTrace:
         self._lock = threading.Lock()
 
     def record(self, name: str, kind: str, device: str,
-               begin_s: float, end_s: float) -> None:
+               begin_s: float, end_s: float, note: str = "") -> None:
         with self._lock:
             self.events.append(TraceEvent(name, kind, device,
-                                          begin_s, end_s))
+                                          begin_s, end_s, note))
 
     # -- summaries -----------------------------------------------------------
     @property
@@ -66,6 +72,10 @@ class ExecutionTrace:
     def by_start(self) -> list:
         return sorted(self.events, key=lambda e: (e.begin_s, e.name))
 
+    def steals(self) -> list:
+        """The runtime re-dispatch events, in steal order."""
+        return [e for e in self.by_start() if e.kind == "steal"]
+
     # -- exports -------------------------------------------------------------
     def to_chrome(self) -> dict:
         """Chrome ``trace_event`` document: one "X" (complete) event per
@@ -79,10 +89,19 @@ class ExecutionTrace:
         for m in events:
             m["name"] = "thread_name"
         for e in self.by_start():
-            events.append({"name": e.name, "cat": e.kind, "ph": "X",
-                           "pid": 0, "tid": lanes[e.device],
-                           "ts": (e.begin_s - t0) * 1e6,
-                           "dur": e.dur_s * 1e6})
+            if e.kind == "steal":
+                # re-dispatch decisions are instants, not spans
+                ev = {"name": e.name, "cat": "steal", "ph": "i", "s": "t",
+                      "pid": 0, "tid": lanes[e.device],
+                      "ts": (e.begin_s - t0) * 1e6}
+            else:
+                ev = {"name": e.name, "cat": e.kind, "ph": "X",
+                      "pid": 0, "tid": lanes[e.device],
+                      "ts": (e.begin_s - t0) * 1e6,
+                      "dur": e.dur_s * 1e6}
+            if e.note:
+                ev["args"] = {"note": e.note}
+            events.append(ev)
         return {"traceEvents": events, "displayTimeUnit": "ms"}
 
     def to_gantt_csv(self) -> str:

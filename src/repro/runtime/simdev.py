@@ -22,6 +22,7 @@ Two extensions serve the ``repro.exec`` layer:
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
 
 import numpy as np
@@ -73,6 +74,38 @@ def fake_matmul_device(root: str, name: str, flops_per_s: float,
     return Dispatcher(registry=registry, cache=cache, policy=policy)
 
 
+class SkewedSimDispatcher(Dispatcher):
+    """A device whose *model is wrong*: predictions come from this
+    dispatcher's (deliberately mis-seeded) tuning cache, but each dispatch
+    sleeps the TRUE time (``true_time(kernel, params)`` seconds) and
+    returns zeros of the output aval instead of running the kernel.  The
+    gap between the two is what the adaptive executor's runtime
+    re-dispatch and online feedback exist to absorb — a static replay of
+    the mis-predicted schedule eats it as idle devices."""
+
+    def __init__(self, *args, true_time, time_scale: float = 1.0, **kwargs):
+        super().__init__(*args, **kwargs)
+        self.true_time = true_time
+        self.time_scale = time_scale
+
+    def dispatch(self, kernel: str, *args, **kwargs):
+        params = self.registry.get(kernel).params_of(*args, **kwargs)
+        time.sleep(self.true_time(kernel, params) * self.time_scale)
+        aval = self.registry.out_aval(kernel, *args, **kwargs)
+        return np.zeros(tuple(aval.shape), np.dtype(str(aval.dtype)))
+
+    __call__ = dispatch
+
+
+def true_time_at(registry, flops_per_s: float):
+    """``true_time(kernel, params)`` for a device sustaining the given
+    flop rate (variant-independent — the truth the skews distort)."""
+    def true_time(kernel: str, params: dict) -> float:
+        rows = registry.feature_rows(kernel, params)
+        return float(rows[0, -1]) / flops_per_s
+    return true_time
+
+
 @dataclasses.dataclass(frozen=True)
 class SimLink:
     """Deterministic simulated interconnect: moving ``n`` bytes takes
@@ -100,3 +133,31 @@ class SimLink:
             comm.measure_pair(
                 src, dst, lambda buf: time.sleep(self.seconds(buf.nbytes)),
                 **kw)
+
+
+class SimFabric:
+    """A ``SimLink`` behind a shared-bus ``repro.exec.Topology``: each
+    transfer holds one lane of its pair's bus (a semaphore of the bus's
+    lane count) while it sleeps the wire time, so same-bus copies
+    genuinely serialize in wall clock — including the adaptive executor's
+    inline steal moves, which never pass through a bus lane worker.
+    Per-transfer duration is the plain link time; contention shows up as
+    queueing, exactly like the EFT's per-lane free times model it."""
+
+    def __init__(self, topology, link: SimLink = None):
+        self.topology = topology
+        self.link = link or SimLink()
+        self._lanes = {b.name: threading.Semaphore(b.lanes)
+                       for b in topology.buses}
+
+    def transfer(self, value, tr):
+        bus = self.topology.bus_of(tr.src, tr.dst)
+        if bus is None:
+            return self.link.transfer(value, tr)
+        with self._lanes[bus.name]:
+            return self.link.transfer(value, tr)
+
+    def measure_into(self, comm, pairs, **kw) -> None:
+        """Uncontended per-pair measurement (the pseudo-kernel predicts
+        the wire time; the bus queueing is the scheduler/executor's job)."""
+        self.link.measure_into(comm, pairs, **kw)

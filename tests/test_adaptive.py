@@ -1,0 +1,457 @@
+"""Adaptive execution: the steal decision rule (move+run vs planned wait,
+idle_only, min_advantage, never-steal-blind), runtime re-dispatch + online
+feedback flipping later decisions mid-run, determinism of decisions under
+reloaded tuning caches with the confidence gate off, shared-bus contention
+in the EFT schedule / executor lanes / SimFabric wall clock, the
+first-error abort contract (original error, cancelled futures, no hang),
+and the adaptive back end's bit-exactness against the sequential bridge."""
+import threading
+import time
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import compile_program, ops, trace
+from repro.core.scheduler import KernelTask, makespan, schedule
+from repro.exec import (AsyncExecutor, Bus, CommModel, ExecTask,
+                        ExecutionTrace, StealPolicy, Topology, Transfer)
+from repro.runtime import (DispatchPolicy, TuningCache, default_registry)
+from repro.runtime.online import OnlineConfig
+from repro.runtime.simdev import SimFabric, SimLink, fake_matmul_device
+
+N = 160
+
+
+# --------------------------------------------------------------------------
+# fixtures
+# --------------------------------------------------------------------------
+
+def _devices(tmp_path, simulate_time=False, time_scale=1.0, policy=None):
+    reg = default_registry(include=["matmul"])
+    return reg, {
+        "d0": fake_matmul_device(str(tmp_path / "devs"), "d0", 1.0e9, reg,
+                                 simulate_time=simulate_time,
+                                 time_scale=time_scale, policy=policy),
+        "d1": fake_matmul_device(str(tmp_path / "devs"), "d1", 0.9e9, reg,
+                                 simulate_time=simulate_time,
+                                 time_scale=time_scale, policy=policy),
+    }
+
+
+def _comm(tmp_path, link, pairs=(("d0", "d1"), ("d1", "d0"))):
+    comm = CommModel(TuningCache(root=str(tmp_path / "comm")))
+    link.measure_into(comm, pairs)
+    return comm
+
+
+def _three_matmuls(reg):
+    rng = np.random.RandomState(0)
+    a, b, w = (jnp.asarray(rng.rand(N, N), jnp.float32) for _ in range(3))
+    with trace(registry=reg) as tb:
+        x = ops.matmul(a, b)
+        y = ops.matmul(x, w)
+        ops.matmul(x, y)
+    return tb.program, dict(tb.bindings)
+
+
+def _steal_task(name, planned, predict, deps=(), inputs=(), fn=None,
+                prio=0.0):
+    """A steal-eligible ExecTask whose body records where it ran."""
+    ran = {}
+
+    def body(env, dev):
+        ran["device"] = dev
+        if fn is not None:
+            fn()
+        return name
+    task = ExecTask(name, planned, lambda env: body(env, planned),
+                    deps=deps, priority=prio,
+                    run_on=body, runnable_on=("d0", "d1"),
+                    predict=predict, inputs=inputs)
+    return task, ran
+
+
+# --------------------------------------------------------------------------
+# decide_device: the pure steal rule
+# --------------------------------------------------------------------------
+
+def test_steals_iff_move_plus_run_beats_planned_wait():
+    comm = lambda src, dst, nbytes: 0.03      # flat 30ms per move
+    ex = AsyncExecutor(steal=StealPolicy(), comm=comm)
+    predict = {"d0": 0.05, "d1": 0.06}.get
+
+    # planned d0 is backed up, d1 idle: wait 0.2+0.05 > move 0.03 + 0.06
+    task, _ = _steal_task("t", "d0", predict,
+                          inputs=(("x", "d0", 1024),))
+    assert ex.decide_device(task, {"d0": 0.2, "d1": 0.0}) == "d1"
+    # planned device free: nothing beats running at home (move is pure loss)
+    assert ex.decide_device(task, {"d0": 0.0, "d1": 0.0}) == "d0"
+    # backlog smaller than the move+run gap: waiting wins
+    assert ex.decide_device(task, {"d0": 0.03, "d1": 0.0}) == "d0"
+    # inputs already home on the candidate: move cost 0, smaller wait flips
+    local, _ = _steal_task("t2", "d0", predict,
+                           inputs=(("x", "d1", 1024),))
+    assert ex.decide_device(local, {"d0": 0.02, "d1": 0.0}) == "d1"
+
+
+def test_idle_only_and_min_advantage_gate_steals():
+    predict = {"d0": 0.05, "d1": 0.01}.get
+    task, _ = _steal_task("t", "d0", predict)
+
+    # d1 wins massively but is not idle: the conservative default stays put
+    busy = AsyncExecutor(steal=StealPolicy(idle_only=True), comm=None)
+    assert busy.decide_device(task, {"d0": 0.5, "d1": 0.001}) == "d0"
+    eager = AsyncExecutor(steal=StealPolicy(idle_only=False), comm=None)
+    assert eager.decide_device(task, {"d0": 0.5, "d1": 0.001}) == "d1"
+
+    # min_advantage: a marginal win below the margin is not worth the move
+    margin = AsyncExecutor(steal=StealPolicy(min_advantage=0.5), comm=None)
+    close = {"d0": 0.05, "d1": 0.04}.get
+    t2, _ = _steal_task("t2", "d0", close)
+    assert margin.decide_device(t2, {"d0": 0.01, "d1": 0.0}) == "d0"
+    assert margin.decide_device(t2, {"d0": 0.5, "d1": 0.0}) == "d1"
+
+
+def test_never_steals_blind_on_unpriceable_candidate():
+    """A cold comm pair (or a device with no model for the kernel) must
+    drop the candidate, not crash the decision or steal at a made-up
+    price."""
+    def cold_comm(src, dst, nbytes):
+        raise ValueError("no measured transfer model")
+    ex = AsyncExecutor(steal=StealPolicy(), comm=cold_comm)
+    task, _ = _steal_task("t", "d0", {"d0": 0.05, "d1": 0.01}.get,
+                          inputs=(("x", "d0", 1024),))
+    assert ex.decide_device(task, {"d0": 1.0, "d1": 0.0}) == "d0"
+
+    def half_blind(dev):
+        if dev == "d1":
+            raise KeyError("no model for this kernel on d1")
+        return 0.05
+    t2, _ = _steal_task("t2", "d0", half_blind)
+    assert ex.decide_device(t2, {"d0": 1.0, "d1": 0.0}) == "d0"
+
+
+def test_static_tasks_never_move():
+    ex = AsyncExecutor(steal=StealPolicy(), comm=None)
+    plain = ExecTask("t", "d0", lambda env: None)
+    assert ex.decide_device(plain, {"d0": 9.9, "d1": 0.0}) == "d0"
+    no_steal = AsyncExecutor()       # steal disabled entirely
+    task, _ = _steal_task("t2", "d0", {"d0": 0.5, "d1": 0.01}.get)
+    assert no_steal.decide_device(task, {"d0": 9.9, "d1": 0.0}) == "d0"
+
+
+# --------------------------------------------------------------------------
+# executor: re-dispatch fires, feedback flips later decisions
+# --------------------------------------------------------------------------
+
+def test_executor_steals_loaded_lane_to_idle_device_and_traces():
+    tracer = ExecutionTrace()
+    hog = ExecTask("hog", "d0", lambda env: time.sleep(0.15) or "hog",
+                   predict=lambda dev: 0.15, run_on=lambda env, dev: "hog",
+                   runnable_on=("d0",), priority=0.0)
+    task, ran = _steal_task("work", "d0", {"d0": 0.05, "d1": 0.06}.get,
+                            prio=1.0)
+    ex = AsyncExecutor(tracer=tracer, steal=StealPolicy())
+    out = ex.run([hog, task])
+    assert out == {"hog": "hog", "work": "work"}
+    assert ran["device"] == "d1"
+    steals = tracer.steals()
+    assert [e.name for e in steals] == ["steal:work"]
+    assert steals[0].note == "d0->d1"
+    ev = {e.name: e for e in tracer.events if e.kind == "compute"}
+    assert ev["work"].device == "d1"
+    assert ev["work"].note == "stolen:d0->d1"
+    assert ev["hog"].device == "d0" and ev["hog"].note == ""
+
+
+def test_online_feedback_flips_a_later_steal_decision_mid_run():
+    """The candidate device initially *predicts* terrible; the observation
+    hook corrects the model after the first completed task, and only then
+    does the next ready task steal — execution feedback changing decisions
+    within one run, not just across runs."""
+    model = {"d1": 10.0}            # wildly pessimistic prior for d1
+
+    def predict(dev):
+        return 0.01 if dev == "d0" else model["d1"]
+
+    def build():
+        hog = ExecTask("hog", "d0", lambda env: time.sleep(0.3) or None,
+                       predict=lambda dev: 0.3, run_on=lambda e, d: None,
+                       runnable_on=("d0",), priority=0.0)
+        probe = ExecTask("probe", "d1",
+                         lambda env: time.sleep(0.02) or "p", priority=0.0)
+        early, early_ran = _steal_task("early", "d0", predict, prio=1.0)
+        late, late_ran = _steal_task("late", "d0", predict,
+                                     deps=("probe",), prio=2.0)
+        return [hog, probe, early, late], early_ran, late_ran
+
+    def observe(task, dev, seconds):
+        model["d1"] = 0.001         # truth learned from the probe
+
+    tasks, early_ran, late_ran = build()
+    AsyncExecutor(steal=StealPolicy(), observe=observe).run(tasks)
+    # 'early' decided while d1 still claimed 10s (and was busy): stayed;
+    # 'late' became ready after the probe's observation fixed the model
+    assert early_ran["device"] == "d0"
+    assert late_ran["device"] == "d1"
+
+    # control: without the feedback hook the prior never corrects and the
+    # same graph never steals
+    model["d1"] = 10.0
+    tasks, early_ran, late_ran = build()
+    AsyncExecutor(steal=StealPolicy()).run(tasks)
+    assert early_ran["device"] == "d0"
+    assert late_ran["device"] == "d0"
+
+
+def test_observe_hook_sees_compute_tasks_only():
+    seen = []
+    tasks = [ExecTask("move", "d0->d1", lambda env: None, kind="transfer"),
+             ExecTask("calc", "d0", lambda env: time.sleep(0.01) or 7,
+                      deps=("move",))]
+    AsyncExecutor(observe=lambda t, d, s: seen.append((t.name, d, s))).run(
+        tasks)
+    assert [(n, d) for n, d, _ in seen] == [("calc", "d0")]
+    assert seen[0][2] >= 0.005      # actual wall seconds, not a prediction
+
+
+# --------------------------------------------------------------------------
+# determinism: reloaded tuning caches, confidence gate off
+# --------------------------------------------------------------------------
+
+def test_steal_decisions_deterministic_under_reloaded_tunecaches(tmp_path):
+    """Two compiles over independently *reloaded* caches (same on-disk
+    state, confidence gate off, no online mutation) must agree on the
+    schedule, on every prediction, and on every steal decision — the
+    adaptive layer adds no hidden nondeterminism on top of the cache
+    state."""
+    from repro.runtime import Dispatcher, Fingerprint
+    policy = DispatchPolicy(confidence_gate=False)
+    link = SimLink(latency_s=1e-4, bytes_per_s=2e9)
+    reg = default_registry(include=["matmul"])
+    for name, f in (("d0", 1.0e9), ("d1", 0.9e9)):     # seed disk state once
+        fake_matmul_device(str(tmp_path / "devs"), name, f, reg)
+    prog, bind = _three_matmuls(reg)
+    comm = _comm(tmp_path / "c", link)
+    compiled, probes = [], []
+    for _ in range(2):              # fresh reloads of the same cache files
+        devices = {
+            name: Dispatcher(
+                registry=reg, policy=policy,
+                cache=TuningCache(root=str(tmp_path / "devs"),
+                                  fingerprint=Fingerprint(
+                                      "sim", name, 1, 1, ("float32",))))
+            for name in ("d0", "d1")}
+        c = compile_program(prog, devices=devices, bindings=bind,
+                            executor="adaptive", comm=comm,
+                            topology=Topology.shared_bus(["d0", "d1"]),
+                            steal=StealPolicy())
+        env = c._bind((), {})
+        tasks = {t.name: t for t in c._exec_tasks(env, adaptive=True)
+                 if t.kind == "compute"}
+        ex = AsyncExecutor(steal=c.steal, comm=c.comm)
+        # the same synthetic load pictures must produce the same choices
+        decisions = [
+            (name, ex.decide_device(t, load))
+            for name, t in sorted(tasks.items())
+            for load in ({"d0": 0.0, "d1": 0.0}, {"d0": 1.0, "d1": 0.0},
+                         {"d0": 0.0, "d1": 1.0}, {"d0": 1e-4, "d1": 0.0})]
+        preds = [(name, dev, t.predict(dev))
+                 for name, t in sorted(tasks.items())
+                 for dev in ("d0", "d1")]
+        compiled.append(c)
+        probes.append((decisions, preds))
+    a, b = compiled
+    assert {n: (x.device, x.start, x.finish)
+            for n, x in a.assignments.items()} == \
+           {n: (x.device, x.start, x.finish)
+            for n, x in b.assignments.items()}
+    assert probes[0] == probes[1]
+    # and the executed outputs are bit-identical across the two reloads
+    out_a, out_b = a(), b()
+    for va, vb in zip(out_a if isinstance(out_a, tuple) else (out_a,),
+                      out_b if isinstance(out_b, tuple) else (out_b,)):
+        assert np.array_equal(np.asarray(va), np.asarray(vb))
+
+
+# --------------------------------------------------------------------------
+# bus contention: EFT schedule, executor lanes, SimFabric wall clock
+# --------------------------------------------------------------------------
+
+def _two_transfer_dag():
+    """Two producers pinned (by speed) to d0, two consumers to d1 — both
+    d0->d1 edges must cross the interconnect."""
+    tasks = [KernelTask("p0", "k", {}, out_bytes=1024.0),
+             KernelTask("p1", "k", {}, out_bytes=1024.0),
+             KernelTask("c0", "k", {}, deps=("p0",)),
+             KernelTask("c1", "k", {}, deps=("p1",))]
+
+    def predict(task, dev):
+        if task.name.startswith("p"):
+            return 0.01 if dev == "d0" else 1.0
+        return 0.01 if dev == "d1" else 1.0
+    return tasks, predict
+
+
+def test_eft_same_bus_transfers_serialize_and_extra_lanes_overlap():
+    tasks, predict = _two_transfer_dag()
+    comm = lambda src, dst, nbytes: 0.1
+
+    def plan(topology):
+        return schedule(tasks, predict, ["d0", "d1"], comm=comm,
+                        topology=topology)
+    one = plan(Topology.shared_bus(["d0", "d1"], lanes=1))
+    two = plan(Topology.shared_bus(["d0", "d1"], lanes=2))
+    free = plan(None)               # uncovered pair: dedicated link lane
+
+    # one lane: the second consumer waits a full extra transfer on the bus
+    starts = sorted(a.start for n, a in one.items()
+                    if n.startswith("c"))
+    assert starts[1] - starts[0] >= 0.1 - 1e-9
+    # the contended plan is strictly longer end to end
+    assert makespan(one) > makespan(two) + 0.05
+    # capacity 2 restores the uncontended overlap exactly
+    assert makespan(two) == pytest.approx(makespan(free))
+
+
+def test_executor_bus_lane_width_serializes_then_overlaps():
+    def sleeper(env):
+        time.sleep(0.08)
+
+    def run(lanes):
+        tracer = ExecutionTrace()
+        tasks = [ExecTask("x0", "bus:b", sleeper, kind="transfer"),
+                 ExecTask("x1", "bus:b", sleeper, kind="transfer")]
+        AsyncExecutor(tracer=tracer).run(tasks,
+                                         lane_width={"bus:b": lanes})
+        ev = sorted((e for e in tracer.events if e.kind == "transfer"),
+                    key=lambda e: e.begin_s)
+        return ev, tracer.wall_s
+
+    ev, wall = run(1)               # one lane worker: strictly sequential
+    assert ev[1].begin_s >= ev[0].end_s - 1e-6
+    assert wall >= 0.15
+    ev, wall = run(2)               # two lanes: the sleeps overlap
+    assert ev[1].begin_s < ev[0].end_s
+    assert wall <= 0.13
+
+
+def test_sim_fabric_serializes_same_bus_in_wall_clock():
+    link = SimLink(latency_s=0.05, bytes_per_s=1e12)
+
+    def race(topology, trs):
+        fabric = SimFabric(topology, link)
+        threads = [threading.Thread(target=fabric.transfer, args=(None, tr))
+                   for tr in trs]
+        t0 = time.perf_counter()
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        return time.perf_counter() - t0
+
+    same = [Transfer("a", "d0", "d1", 8, bus="pcie0"),
+            Transfer("b", "d1", "d0", 8, bus="pcie0")]
+    elapsed = race(Topology.shared_bus(["d0", "d1"], lanes=1), same)
+    assert elapsed >= 0.1           # both 50ms copies held the single lane
+    split = [Transfer("a", "d0", "d1", 8, bus="x"),
+             Transfer("b", "d2", "d3", 8, bus="y")]
+    elapsed = race(Topology([Bus("x", ("d0", "d1")),
+                             Bus("y", ("d2", "d3"))]), split)
+    assert elapsed < 0.09           # different buses: copies overlap
+
+
+# --------------------------------------------------------------------------
+# first-error abort: original error, cancelled futures, no hang
+# --------------------------------------------------------------------------
+
+def test_abort_raises_original_error_and_cancels_pending_futures():
+    boom = ValueError("kernel exploded")
+
+    def bad(env):
+        time.sleep(0.02)
+        raise boom
+
+    tasks = [ExecTask("bad", "d0", bad),
+             ExecTask("child", "d0", lambda env: env["bad"],
+                      deps=("bad",)),
+             ExecTask("grandchild", "d1", lambda env: env["child"],
+                      deps=("child",)),
+             ExecTask("slow", "d1", lambda env: time.sleep(0.1) or "ok")]
+    t0 = time.perf_counter()
+    with pytest.raises(ValueError, match="kernel exploded") as err:
+        AsyncExecutor().run(tasks)
+    assert err.value is boom        # the original exception, not a wrapper
+    assert time.perf_counter() - t0 < 5.0   # returned, never hung
+
+
+def test_failing_simdev_task_raises_through_compiled_program(tmp_path):
+    """A device that dies mid-run must surface the original error from
+    ``CompiledProgram.__call__`` (async back end), leaving the partial
+    trace — not hang on the dead node's never-resolved future."""
+    reg, devices = _devices(tmp_path)
+    prog, bind = _three_matmuls(reg)
+
+    calls = {"n": 0}
+    victim = devices["d0"]
+    real = victim.dispatch
+
+    def dying(kernel, *args, **kwargs):
+        calls["n"] += 1
+        if calls["n"] >= 2:         # first node succeeds, then the device dies
+            raise RuntimeError("simdev d0 fell off the bus")
+        return real(kernel, *args, **kwargs)
+    victim.dispatch = dying
+
+    c = compile_program(prog, devices=devices, bindings=bind,
+                        executor="async")
+    # force every node onto the dying device so the failure is guaranteed
+    for a in c.assignments.values():
+        a.device = "d0"
+    with pytest.raises(RuntimeError, match="fell off the bus"):
+        c()
+    assert c.last_trace is not None     # partial trace of the dying run
+    done = [e.name for e in c.last_trace.events if e.kind == "compute"]
+    assert len(done) >= 1
+
+
+# --------------------------------------------------------------------------
+# end to end: the adaptive back end against the sequential reference
+# --------------------------------------------------------------------------
+
+def test_adaptive_backend_bit_exact_vs_sequential(tmp_path):
+    reg, devices = _devices(tmp_path, simulate_time=True, time_scale=0.05)
+    prog, bind = _three_matmuls(reg)
+    link = SimLink(latency_s=1e-4, bytes_per_s=2e9)
+    topo = Topology.shared_bus(["d0", "d1"])
+    c = compile_program(prog, devices=devices, bindings=bind,
+                        executor="adaptive", comm=_comm(tmp_path, link),
+                        transfer=SimFabric(topo, link).transfer,
+                        topology=topo, steal=StealPolicy())
+    ref = c(_executor="sequential")
+    out = c()                       # compiled default: adaptive
+    for va, vb in zip(ref if isinstance(ref, tuple) else (ref,),
+                      out if isinstance(out, tuple) else (out,)):
+        assert np.array_equal(np.asarray(va), np.asarray(vb))
+
+
+def test_adaptive_online_feedback_reaches_the_refiners(tmp_path):
+    from repro.core.nnc import LinearModel
+    reg, devices = _devices(tmp_path, simulate_time=True, time_scale=0.02)
+    prog, bind = _three_matmuls(reg)
+    c = compile_program(prog, devices=devices, bindings=bind,
+                        executor="adaptive", steal=StealPolicy(),
+                        online=OnlineConfig(refit_every=1, budget_rows=8,
+                                            model_factory=LinearModel,
+                                            save=False))
+    assert set(c.refiners) == {"d0", "d1"}
+    c()
+    refits = sum(sum(r.refits.values()) for r in c.refiners.values())
+    observed = {k for r in c.refiners.values()
+                for k in r.observed_kernels()}
+    assert refits >= 1              # every completed node fed a refit
+    assert observed == {"matmul"}
+    mapes = [r.rolling_mape("matmul") for r in c.refiners.values()
+             if r.observed_kernels()]
+    assert mapes and all(np.isfinite(m) for m in mapes)

@@ -127,6 +127,92 @@ def test_schema_rejects_malformed(bench_doc):
                   "configs": {"undeclared_cfg": {}}}))
 
 
+def test_adaptive_section_records_steals_feedback_and_exactness(bench_doc):
+    """The mis-seeded scenario must round-trip through schema 2: the
+    adaptive executor steals at least once, online feedback refits fire,
+    and outputs stay bit-exact against the sequential reference."""
+    doc, _ = bench_doc
+    ad = doc["adaptive"]
+    assert doc["schema"] >= 2
+    assert ad["devices"]["d0"]["claimed_flops_per_s"] > \
+        ad["devices"]["d0"]["true_flops_per_s"]    # the planted lie
+    assert ad["geomean_speedup_vs_static"] > 0
+    assert sum(w["n_steals"] for w in ad["workloads"].values()) >= 1
+    assert sum(w["refits"] for w in ad["workloads"].values()) >= 1
+    assert all(w["bit_exact"] for w in ad["workloads"].values())
+    for w in ad["workloads"].values():
+        for key in ("static_wall_s", "adaptive_wall_s", "replan_wall_s",
+                    "speedup_vs_static", "replan_speedup_vs_static"):
+            assert w[key] > 0
+
+
+def test_compare_only_kind_splits_the_gate(bench_doc):
+    """CI blocks on sim regressions and only warns on real ones — the
+    filter must hide each kind from the other's pass."""
+    doc, _ = bench_doc
+    drift = copy.deepcopy(doc)
+    w = next(iter(drift["workloads"].values()))
+    kernel = next(iter(w["configs"]["cpu"]["mape"]))
+    w["configs"]["cpu"]["mape"][kernel] += 500.0       # real-config drift
+    regs_sim, _ = compare_docs(doc, drift, only_kind="sim")
+    regs_real, _ = compare_docs(doc, drift, only_kind="real")
+    assert regs_sim == []
+    assert any(f"mape.{kernel}" in r for r in regs_real)
+
+    worse = copy.deepcopy(doc)
+    worse["geomean"]["simdev2"]["speedup_vs_worst"] = 0.5  # sim regression
+    regs_sim, _ = compare_docs(doc, worse, only_kind="sim")
+    regs_real, _ = compare_docs(doc, worse, only_kind="real")
+    assert any("geomean[simdev2]" in r for r in regs_sim)
+    assert regs_real == []
+
+    with pytest.raises(ValueError, match="only_kind"):
+        compare_docs(doc, doc, only_kind="gpu")
+
+
+def test_compare_guards_the_adaptive_section(bench_doc):
+    doc, _ = bench_doc
+    # simulated by construction: compared under the sim gate, not real
+    collapsed = copy.deepcopy(doc)
+    collapsed["adaptive"]["geomean_speedup_vs_static"] = 0.1
+    regs, _ = compare_docs(doc, collapsed, only_kind="sim")
+    assert any("adaptive.geomean_speedup_vs_static" in r for r in regs)
+    regs, _ = compare_docs(doc, collapsed, only_kind="real")
+    assert regs == []
+
+    broken = copy.deepcopy(doc)
+    name = next(iter(broken["adaptive"]["workloads"]))
+    broken["adaptive"]["workloads"][name]["bit_exact"] = False
+    regs, _ = compare_docs(doc, broken)
+    assert any("bit-exactness" in r and name in r for r in regs)
+
+    gone = copy.deepcopy(doc)
+    del gone["adaptive"]
+    regs, _ = compare_docs(doc, gone)
+    assert any("adaptive section missing" in r for r in regs)
+    # new-only section is a note, not a regression (v1 baseline upgrade)
+    regs, notes = compare_docs(gone, doc)
+    assert regs == [] and any("adaptive section new" in n for n in notes)
+
+
+def test_schema_rejects_malformed_adaptive_section(bench_doc):
+    doc, _ = bench_doc
+
+    def broken(mutate):
+        bad = copy.deepcopy(doc)
+        mutate(bad)
+        with pytest.raises(ValueError, match="bench.json invalid"):
+            validate_bench(bad)
+
+    broken(lambda d: d["adaptive"].__delitem__("geomean_speedup_vs_static"))
+    broken(lambda d: next(iter(d["adaptive"]["workloads"].values()))
+           .__delitem__("n_steals"))
+    broken(lambda d: next(iter(d["adaptive"]["workloads"].values()))
+           .__setitem__("bit_exact", "yes"))
+    # an adaptive section on a schema-1 document is a contradiction
+    broken(lambda d: d.__setitem__("schema", 1))
+
+
 def test_run_rejects_unknown_config(tmp_path):
     with pytest.raises(ValueError, match="unknown configs"):
         run_bench(quick=True, out_path=str(tmp_path / "b.json"),

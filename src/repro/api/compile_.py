@@ -93,7 +93,8 @@ def _resolve_devices(devices, policy) -> dict:
 def compile_program(program: Program, devices=None, policy=None,
                     bindings=None, executor: str = "sequential",
                     comm=None, transfer=None, topology=None,
-                    steal=None, online=None) -> "CompiledProgram":
+                    steal=None, online=None,
+                    telemetry=None) -> "CompiledProgram":
     """``comm`` is a ``repro.exec.CommModel`` (or a bare
     ``(src, dst, nbytes) -> seconds`` callable) that makes the EFT
     schedule transfer-aware; ``transfer`` is the physical move hook
@@ -107,13 +108,28 @@ def compile_program(program: Program, devices=None, policy=None,
     ``StealPolicy()`` when ``executor="adaptive"``).  ``online`` enables
     execution-time feedback: ``True`` or a ``runtime.online.OnlineConfig``
     builds one ``OnlineRefiner`` per device over that device's tuning
-    cache, fed the actual duration of every completed node."""
+    cache, fed the actual duration of every completed node.
+
+    ``telemetry`` is a ``repro.obs.Telemetry`` threaded through every
+    decision point of this compiled program: the device dispatchers
+    (decision counters, gate events, per-kernel residuals — attached only
+    where none is set, an explicitly instrumented dispatcher keeps its
+    own), the comm model, the per-device refiners (refit events), the
+    executor (steals, queue depths, transfer waits), and each call's
+    predicted-vs-realized makespan."""
     if executor not in EXECUTORS:
         raise ValueError(f"executor must be one of {EXECUTORS}, "
                          f"got {executor!r}")
     dispatchers = _resolve_devices(devices, policy)
     for disp in dispatchers.values():
         program.check(disp.registry)
+    if telemetry is not None:
+        for disp in dispatchers.values():
+            if getattr(disp, "telemetry", None) is None:
+                disp.telemetry = telemetry
+        if hasattr(comm, "comm_fn") and \
+                getattr(comm, "telemetry", None) is None:
+            comm.telemetry = telemetry
     tasks = program.to_kernel_tasks()
     predict = predictor_from_runtime(dispatchers)
     comm_fn = comm.comm_fn() if hasattr(comm, "comm_fn") else comm
@@ -124,7 +140,8 @@ def compile_program(program: Program, devices=None, policy=None,
     if online:
         config = online if isinstance(online, OnlineConfig) else \
             OnlineConfig()
-        refiners = {name: OnlineRefiner(disp.cache, config)
+        refiners = {name: OnlineRefiner(disp.cache, config,
+                                        telemetry=telemetry)
                     for name, disp in dispatchers.items()}
     return CompiledProgram(program=program, dispatchers=dispatchers,
                            assignments=assignments,
@@ -135,7 +152,8 @@ def compile_program(program: Program, devices=None, policy=None,
                                                 input_homes=homes,
                                                 topology=topology),
                            transfer=transfer, topology=topology,
-                           steal=steal, refiners=refiners)
+                           steal=steal, refiners=refiners,
+                           telemetry=telemetry)
 
 
 @dataclasses.dataclass
@@ -154,6 +172,8 @@ class CompiledProgram:
     steal: Optional[StealPolicy] = None   # adaptive re-dispatch policy
     refiners: dict = dataclasses.field(default_factory=dict)
     #   device name -> OnlineRefiner; non-empty enables execution feedback
+    telemetry: Optional[object] = None    # repro.obs.Telemetry (or None):
+    #   per-call predicted-vs-realized makespan + executor decision events
     last_trace: Optional[ExecutionTrace] = None  # set by every execution
 
     @property
@@ -238,6 +258,7 @@ class CompiledProgram:
         # installed up front so a mid-run failure leaves the partial trace
         # (the events up to the dying node), not the previous run's
         self.last_trace = tracer
+        tracer.set_epoch(time.perf_counter())
         node_by = {n.name: n for n in self.program.nodes}
         for task in self.order:
             node = node_by[task.name]
@@ -411,7 +432,8 @@ class CompiledProgram:
         tracer = ExecutionTrace()
         self.last_trace = tracer       # pre-installed: failures keep the
                                        # partial trace of the dying run
-        results = AsyncExecutor(tracer=tracer).run(
+        results = AsyncExecutor(tracer=tracer,
+                                telemetry=self.telemetry).run(
             self._exec_tasks(env), lane_width=self._lane_widths())
         for node in self.program.nodes:
             env[node.name] = results[node.name]
@@ -422,7 +444,8 @@ class CompiledProgram:
         executor = AsyncExecutor(tracer=tracer,
                                  steal=self.steal or StealPolicy(),
                                  comm=self.comm,
-                                 observe=self._observe_hook())
+                                 observe=self._observe_hook(),
+                                 telemetry=self.telemetry)
         results = executor.run(self._exec_tasks(env, adaptive=True),
                                lane_width=self._lane_widths())
         for node in self.program.nodes:
@@ -439,11 +462,21 @@ class CompiledProgram:
             raise ValueError(f"executor must be one of {EXECUTORS}, "
                              f"got {mode!r}")
         env = self._bind(args, named)
+        t0 = time.perf_counter()
         if mode == "adaptive":
             self._run_adaptive(env)
         elif mode == "async":
             self._run_async(env)
         else:
             self._run_sequential(env)
+        if self.telemetry is not None:
+            wall = time.perf_counter() - t0
+            predicted = self.makespan
+            self.telemetry.observe("program.wall_s", wall)
+            self.telemetry.instant(
+                f"makespan:{mode}", cat="makespan", executor=mode,
+                predicted_s=float(predicted), realized_s=float(wall),
+                ape_pct=100.0 * abs(wall - predicted)
+                / max(abs(wall), 1e-12))
         outs = tuple(env[o] for o in self.program.outputs)
         return outs[0] if len(outs) == 1 else outs

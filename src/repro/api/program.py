@@ -156,13 +156,14 @@ class Program:
     # -- conveniences (lazy imports avoid package cycles) --------------------
     def compile(self, devices=None, policy=None, bindings=None,
                 executor: str = "sequential", comm=None, transfer=None,
-                topology=None, steal=None, online=None):
+                topology=None, steal=None, online=None, telemetry=None):
         """Schedule + specialise this program; see ``repro.api.compile_``."""
         from repro.api.compile_ import compile_program
         return compile_program(self, devices=devices, policy=policy,
                                bindings=bindings, executor=executor,
                                comm=comm, transfer=transfer,
-                               topology=topology, steal=steal, online=online)
+                               topology=topology, steal=steal, online=online,
+                               telemetry=telemetry)
 
     def to_json(self) -> dict:
         from repro.api.export import program_to_json

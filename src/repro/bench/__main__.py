@@ -1,9 +1,10 @@
-"""CLI: ``python -m repro.bench {run,adaptive,compare}``.
+"""CLI: ``python -m repro.bench {run,adaptive,compare,history}``.
 
     PYTHONPATH=src python -m repro.bench run --quick
     PYTHONPATH=src python -m repro.bench adaptive --quick
     PYTHONPATH=src python -m repro.bench compare \\
         benchmarks/baseline_bench.json results/bench.json --only-kind sim
+    PYTHONPATH=src python -m repro.bench history
 """
 from __future__ import annotations
 
@@ -15,6 +16,8 @@ import sys
 from repro.bench.compare_ import compare_docs, format_compare
 from repro.bench.harness import (DEFAULT_CONFIGS, run_adaptive, run_bench,
                                  summarize)
+from repro.bench.history import (DEFAULT_PATTERNS, discover, format_history,
+                                 load_row)
 from repro.bench.schema import load_bench, validate_bench
 from repro.workloads import SIZES
 
@@ -48,6 +51,15 @@ def main(argv=None) -> int:
     adp.add_argument("--results-dir", default="results")
     adp.add_argument("--workloads", default=None)
     adp.add_argument("--size", choices=SIZES, default=None)
+
+    hp = sub.add_parser("history",
+                        help="list saved bench.json documents (schema "
+                             "v1-v3 tolerated) with geomean speedups, "
+                             "drift flags, and adaptive geomeans; exit 2 "
+                             "when none are found")
+    hp.add_argument("paths", nargs="*",
+                    help="files or globs (default: "
+                         + " ".join(DEFAULT_PATTERNS) + ")")
 
     cmpp = sub.add_parser("compare",
                           help="diff two bench.json files; exit 1 on "
@@ -87,7 +99,9 @@ def main(argv=None) -> int:
             workloads=args.workloads.split(",") if args.workloads else None,
             size=args.size)
         doc["adaptive"] = section
-        doc["schema"] = max(int(doc["schema"]), 2)
+        # the merged section carries schema-3 fields (telemetry_path)
+        from repro.bench.schema import BENCH_SCHEMA_VERSION
+        doc["schema"] = max(int(doc["schema"]), BENCH_SCHEMA_VERSION)
         validate_bench(doc)
         tmp = args.out + ".tmp"
         with open(tmp, "w") as f:
@@ -99,6 +113,16 @@ def main(argv=None) -> int:
         print(f"adaptive geomean speedup vs static replay: {g:.2f}x")
         print(f"merged adaptive section into {args.out}")
         return 0 if g > 1.0 else 1
+    if args.cmd == "history":
+        paths = discover(tuple(args.paths) if args.paths
+                         else DEFAULT_PATTERNS)
+        if not paths:
+            print("bench history: no bench documents found",
+                  file=sys.stderr)
+            return 2
+        for line in format_history([load_row(p) for p in paths]):
+            print(line)
+        return 0
     try:
         baseline = load_bench(args.baseline)
         new = load_bench(args.new)

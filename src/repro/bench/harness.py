@@ -123,7 +123,9 @@ def _device_mape(cache: TuningCache) -> dict:
 # per-workload measurement
 # --------------------------------------------------------------------------
 
-def _run_workload(built, cfg: dict, reps: int) -> dict:
+def _run_workload(name: str, built, cfg: dict, reps: int) -> dict:
+    from repro.obs import Telemetry
+
     if cfg["kind"] == "real":
         # real runs are sub-millisecond and noisy; extra reps are nearly
         # free and min-of-k needs the k (sim runs sleep out the schedule —
@@ -133,6 +135,7 @@ def _run_workload(built, cfg: dict, reps: int) -> dict:
     walls, makespans, compiled = {}, {}, {}
     n_transfers = 0
     overhead = {"dispatch_frac": 0.0, "executor_frac": 0.0}
+    telemetry_section = None
     for mode in MODES:
         c = prog.compile(devices=cfg["mode_maps"][mode],
                          bindings=built.bindings, executor=cfg["executor"],
@@ -146,6 +149,14 @@ def _run_workload(built, cfg: dict, reps: int) -> dict:
         devmap = cfg["mode_maps"][mode]
         for d in devmap.values():
             d.reset_counters()
+        if mode == "best":
+            # the steady-state legs run *with* telemetry attached, so the
+            # reported walls/overheads are the instrumented numbers — the
+            # acceptance claim is <5% dispatch overhead telemetry included.
+            # Attached post-warmup: jit compiles never enter the residuals
+            tel = Telemetry(run_id=f"{name}:{cfg['kind']}:best")
+            for d in devmap.values():
+                d.telemetry = tel
         rep_walls = []
         for _ in range(reps):
             t0 = time.perf_counter()
@@ -153,6 +164,12 @@ def _run_workload(built, cfg: dict, reps: int) -> dict:
             rep_walls.append(time.perf_counter() - t0)
         walls[mode] = float(min(rep_walls))
         if mode == "best":
+            for d in devmap.values():   # mode_maps are shared across
+                d.telemetry = None      # workloads: scope the run here
+            s = tel.summary()
+            telemetry_section = {
+                "decisions": s["decisions"], "overhead": s["overhead"],
+                "drift": s["drift"], "drift_flags": s["drift_flags"]}
             total = sum(rep_walls)
             decision = sum(d.decision_s for d in devmap.values())
             overhead["dispatch_frac"] = decision / max(total, 1e-12)
@@ -177,6 +194,7 @@ def _run_workload(built, cfg: dict, reps: int) -> dict:
         "speedup_vs_worst": walls["worst"] / max(walls["best"], 1e-12),
         "overhead": overhead,
         "mape": {k: float(np.mean(v)) for k, v in sorted(mapes.items())},
+        "telemetry": telemetry_section,
     }
 
 
@@ -212,13 +230,17 @@ def run_adaptive(quick: bool = False, results_dir: str = "results",
 
     All dispatchers sleep the TRUE time regardless of what they predict
     (``SkewedSimDispatcher``), so wall clock measures schedule quality.
-    The adaptive run's Chrome trace (steal instants included) is written
-    to ``results_dir/trace_name``.
+    Each adaptive rep runs under a fresh ``repro.obs.Telemetry``; the last
+    rep's Chrome trace — task slices merged with telemetry counter tracks
+    and steal/refit instants on one clock — is written to
+    ``results_dir/trace_name``, with the raw telemetry saved next to it
+    (``telemetry_path``) for ``python -m repro.obs report``.
     """
     import json as _json
 
     from repro.core.nnc import LinearModel
     from repro.exec import CommModel, StealPolicy, Topology
+    from repro.obs import Telemetry
     from repro.runtime.online import OnlineConfig
     from repro.runtime.simdev import (SimFabric, SimLink,
                                       SkewedSimDispatcher, true_time_at)
@@ -267,7 +289,7 @@ def run_adaptive(quick: bool = False, results_dir: str = "results",
                                "true_flops_per_s": ADAPTIVE_TRUE_FLOPS}
                            for n, c in ADAPTIVE_CLAIMED.items()},
                "workloads": {}, "size": size}
-    last_trace = None
+    last_trace = last_tel = None
     reps = 2                       # min-of-k per leg: sleeps realize the
     #   schedule deterministically, reps only shave host-noise outliers
     for name, b in built.items():
@@ -286,19 +308,27 @@ def run_adaptive(quick: bool = False, results_dir: str = "results",
         # a fresh mis-seeded start so each measures THE mis-seeded run
         walls, n_steals, refits = [], 0, 0
         for r in range(reps):
+            # one Telemetry per rep so its points share the rep's trace
+            # epoch; the last rep's pair (trace + telemetry) is saved
+            tel = Telemetry(run_id=f"adaptive:{name}")
             c_adapt = b.program.compile(
                 devices=fresh_devices(f"{name}-a{r}"), executor="adaptive",
-                steal=StealPolicy(), online=online, **common)
+                steal=StealPolicy(), online=online, telemetry=tel, **common)
             if r == 0:             # the bit-exact sequential reference
                 out_ref = c_adapt(_executor="sequential")
             t0 = time.perf_counter()
             out_adapt = c_adapt()
             walls.append(time.perf_counter() - t0)
             last_trace = c_adapt.last_trace
+            last_tel = tel
             n_steals = len(last_trace.steals())
             refits = sum(sum(rr.refits.values())
                          for rr in c_adapt.refiners.values())
         wall_adapt = min(walls)
+        # scope the saved telemetry to the adaptive run: the replan leg
+        # reuses these dispatchers and must not keep reporting into it
+        for d in c_adapt.dispatchers.values():
+            d.telemetry = None
 
         # recompile over the feedback-corrected caches: the EFT now plans
         # with (approximately) true per-device times
@@ -335,8 +365,16 @@ def run_adaptive(quick: bool = False, results_dir: str = "results",
         os.makedirs(results_dir, exist_ok=True)
         trace_path = os.path.join(results_dir, trace_name)
         with open(trace_path, "w") as f:
-            _json.dump(last_trace.to_chrome(), f, indent=1)
+            # one merged timeline: task slices plus the run's counter
+            # tracks (queue depth, live MAPE) and steal/refit instants
+            _json.dump(last_trace.to_chrome(telemetry=last_tel), f,
+                       indent=1)
         section["trace_path"] = trace_path
+        tel_path = os.path.join(
+            results_dir, trace_name.replace("exec_trace", "telemetry")
+            if "exec_trace" in trace_name else "telemetry_adaptive.json")
+        last_tel.save(tel_path)
+        section["telemetry_path"] = tel_path
     return section
 
 
@@ -423,7 +461,7 @@ def run_bench(quick: bool = False, out_path: str = "results/bench.json",
             "size": size,
             "kernels": sorted(b.kernels_used),
             "n_nodes": b.n_nodes,
-            "configs": {c: _run_workload(b, cfg, reps)
+            "configs": {c: _run_workload(name, b, cfg, reps)
                         for c, cfg in cfgs.items()},
         }
 
@@ -495,6 +533,13 @@ def summarize(doc: dict) -> list:
         lines.append(f"{'geomean':20s} {'':5s} {'':5s} {'':9s} {'':8s} "
                      f"{'':8s} {g['speedup_vs_default']:6.2f}x "
                      f"{g['speedup_vs_worst']:7.2f}x")
+        flags = sorted({f"{name}:{k}"
+                        for name, w in doc["workloads"].items()
+                        for k in ((w["configs"].get(cfg) or {})
+                                  .get("telemetry") or {})
+                        .get("drift_flags", ())})
+        if flags:
+            lines.append(f"drift flags ({cfg}): {', '.join(flags)}")
     ad = doc.get("adaptive")
     if ad:
         lines.append("-- adaptive (mis-seeded steal + feedback vs static "

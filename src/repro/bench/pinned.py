@@ -75,7 +75,8 @@ class PinnedDispatcher(Dispatcher):
         rk = self.registry.get(kernel)
         params = rk.params_of(*args, **kwargs)
         idx, pred_s = self._choose(kernel, params)
-        self.decision_s += time.perf_counter() - t0
+        decision = time.perf_counter() - t0
+        self.decision_s += decision
         self.n_calls += 1
         t1 = time.perf_counter()
         if self.simulate_time:
@@ -85,7 +86,19 @@ class PinnedDispatcher(Dispatcher):
         else:
             aval = self.registry.out_aval(kernel, *args, **kwargs)
             out = np.zeros(tuple(aval.shape), np.dtype(str(aval.dtype)))
-        self.kernel_s += time.perf_counter() - t1
+        kernel_s = time.perf_counter() - t1
+        self.kernel_s += kernel_s
+        tel = self._telemetry
+        if tel is not None:
+            tel.count("dispatch.pinned")
+            tel.observe("dispatch.overhead_s", decision)
+            tel.observe(f"kernel.{kernel}.s", kernel_s)
+            if self.execute:
+                # predicted-vs-actual only where the kernel really ran;
+                # attach telemetry after warmup or the first call's jit
+                # compile lands in the residual (the bench does)
+                tel.residual(kernel, pred_s, kernel_s,
+                             fit_band_pct=self._entry(kernel).fit_mape)
         return out
 
     __call__ = dispatch

@@ -48,13 +48,30 @@ across the version bump::
           "n_steals": int, "refits": int, "bit_exact": bool}},
         "geomean_speedup_vs_static": float,
         "trace_path": str}                # Chrome trace of the adaptive run
+
+Schema 3 folds run-scoped telemetry (``repro.obs``) in.  Both additions
+are again *optional*, so schema-1/2 documents — and schema-3 documents
+produced with telemetry disabled — stay loadable::
+
+      # per workload x config, next to "overhead"/"mape":
+      "telemetry": {
+        "decisions": {counter: int},      # dispatch.*/gate.*/exec.steals/...
+        "overhead": {"dispatch_frac": float},   # from recorded histograms
+        "drift": {kernel: {"live_mape_pct": float, "fit_band_pct": float,
+                            "n": int, "flagged": bool}},
+        "drift_flags": [str, ...]}        # kernels whose live MAPE left
+                                          #   the fit-time error band
+
+      # inside "adaptive":
+      "telemetry_path": str               # saved obs.Telemetry JSON of the
+                                          #   traced adaptive run
 """
 from __future__ import annotations
 
 import json
 
-BENCH_SCHEMA_VERSION = 2
-ACCEPTED_SCHEMAS = (1, 2)
+BENCH_SCHEMA_VERSION = 3
+ACCEPTED_SCHEMAS = (1, 2, 3)
 MODES = ("best", "default", "worst")
 
 
@@ -136,6 +153,25 @@ def validate_bench(doc: dict) -> dict:
             for kernel, v in r["mape"].items():
                 _require(isinstance(v, (int, float)),
                          f"{cp}.mape.{kernel}", "expected a number")
+            tel = r.get("telemetry")
+            if tel is not None:             # optional, schema-3 only
+                tp = f"{cp}.telemetry"
+                _require(doc["schema"] >= 3, tp,
+                         "telemetry section requires schema >= 3")
+                _require(isinstance(tel, dict), tp, "expected an object")
+                _require(isinstance(tel.get("decisions"), dict),
+                         f"{tp}.decisions", "expected an object")
+                for k, v in tel["decisions"].items():
+                    _num(tel["decisions"], f"{tp}.decisions", k, lo=0)
+                _require(isinstance(tel.get("overhead"), dict),
+                         f"{tp}.overhead", "expected an object")
+                _require(isinstance(tel.get("drift"), dict),
+                         f"{tp}.drift", "expected an object")
+                _require(isinstance(tel.get("drift_flags"), list),
+                         f"{tp}.drift_flags", "expected a list")
+                for k in tel["drift_flags"]:
+                    _require(isinstance(k, str), f"{tp}.drift_flags",
+                             "expected kernel-name strings")
 
     geo = doc.get("geomean")
     _require(isinstance(geo, dict) and geo, "$.geomean",
@@ -172,6 +208,11 @@ def validate_bench(doc: dict) -> dict:
             _require(isinstance(w.get("bit_exact"), bool),
                      f"{wp}.bit_exact", "expected bool")
         _num(ad, "$.adaptive", "geomean_speedup_vs_static", lo=0)
+        if ad.get("telemetry_path") is not None:    # optional, schema-3
+            _require(doc["schema"] >= 3, "$.adaptive.telemetry_path",
+                     "telemetry_path requires schema >= 3")
+            _require(isinstance(ad["telemetry_path"], str),
+                     "$.adaptive.telemetry_path", "expected a string")
     return doc
 
 

@@ -110,6 +110,10 @@ class AsyncExecutor:
     prices moves at zero); ``observe(task, device, seconds)`` is called
     after every completed compute task — the online-feedback hook
     ``repro.api`` wires to ``runtime.online.OnlineRefiner.observe``.
+    ``telemetry`` (a ``repro.obs.Telemetry``) makes the run observable:
+    per-lane queue-depth gauge series, queue-wait histograms (transfers
+    keyed by their bus/link lane), and steal instants carrying the priced
+    alternatives the decision weighed.
     """
 
     def __init__(self, tracer: Optional[ExecutionTrace] = None,
@@ -117,12 +121,14 @@ class AsyncExecutor:
                  steal: Optional[StealPolicy] = None,
                  comm: Optional[Callable[[str, str, float], float]] = None,
                  observe: Optional[Callable[[ExecTask, str, float],
-                                            None]] = None):
+                                            None]] = None,
+                 telemetry=None):
         self.tracer = tracer
         self.clock = clock
         self.steal = steal
         self.comm = comm
         self.observe = observe
+        self.telemetry = telemetry
 
     # -- validation ----------------------------------------------------------
     @staticmethod
@@ -163,14 +169,19 @@ class AsyncExecutor:
         return sum(self.comm(home, device, nbytes)
                    for _, home, nbytes in task.inputs if home != device)
 
-    def decide_device(self, task: ExecTask, load: Mapping[str, float]) -> str:
-        """Pure decision rule: the device the task should run on given the
-        current predicted per-device load (exposed for direct testing)."""
+    def price_decision(self, task: ExecTask,
+                       load: Mapping[str, float]) -> tuple:
+        """``(device, costs)``: the device the task should run on given
+        the current predicted per-device load, plus every alternative the
+        rule priced (device -> predicted load+move+run seconds; devices
+        skipped as non-idle or unpriceable are absent) — the telemetry
+        record of *why* a steal happened."""
         if (self.steal is None or task.run_on is None
                 or task.predict is None or not task.runnable_on):
-            return task.device
+            return task.device, {}
         planned = task.device
         planned_cost = load.get(planned, 0.0) + task.predict(planned)
+        costs = {planned: planned_cost}
         best_dev, best_cost = planned, planned_cost
         for dev in task.runnable_on:
             if dev == planned:
@@ -185,12 +196,18 @@ class AsyncExecutor:
                 # unpriceable candidate (e.g. cold comm pair, no model for
                 # this kernel on that device) — never steal blind
                 continue
+            costs[dev] = cost
             if cost < best_cost:
                 best_dev, best_cost = dev, cost
         if best_dev != planned \
                 and best_cost < planned_cost * (1.0 - self.steal.min_advantage):
-            return best_dev
-        return planned
+            return best_dev, costs
+        return planned, costs
+
+    def decide_device(self, task: ExecTask, load: Mapping[str, float]) -> str:
+        """Pure decision rule (exposed for direct testing); see
+        ``price_decision`` for the priced-alternatives variant."""
+        return self.price_decision(task, load)[0]
 
     # -- execution -----------------------------------------------------------
     def run(self, tasks: Sequence[ExecTask],
@@ -204,6 +221,11 @@ class AsyncExecutor:
         if not tasks:
             return {}
         self._validate(tasks)
+        tel = self.telemetry
+        # one run epoch, captured before any work: Chrome trace, Gantt CSV
+        # and telemetry all normalize against this single clock value
+        if self.tracer is not None:
+            self.tracer.set_epoch(self.clock())
 
         by_name = {t.name: t for t in tasks}
         futures: dict = {t.name: Future() for t in tasks}
@@ -233,6 +255,7 @@ class AsyncExecutor:
         # drained).
         queued: dict = {lane: {} for lane in lanes}   # lane -> {name: est fn}
         running: dict = {}              # task name -> (lane, est fn, t_start)
+        enq_t: dict = {}                # task name -> enqueue clock time
 
         def _est_fn(task: ExecTask, lane: str):
             if task.predict is None:    # transfers / non-adaptive tasks
@@ -257,15 +280,29 @@ class AsyncExecutor:
 
         def enqueue(task: ExecTask) -> None:
             now = self.clock()
+            costs: dict = {}
             with lock:
                 state["seq"] += 1
                 seq = state["seq"]
-                lane = self.decide_device(task, _load(now)) \
-                    if self.steal is not None else task.device
+                if self.steal is not None:
+                    lane, costs = self.price_decision(task, _load(now))
+                else:
+                    lane = task.device
                 queued[lane][task.name] = _est_fn(task, lane)
-            if lane != task.device and self.tracer is not None:
-                self.tracer.record(f"steal:{task.name}", "steal", lane,
-                                   now, now, note=f"{task.device}->{lane}")
+                enq_t[task.name] = now
+                depth = len(queued[lane])
+            if lane != task.device:
+                if self.tracer is not None:
+                    self.tracer.record(f"steal:{task.name}", "steal", lane,
+                                       now, now,
+                                       note=f"{task.device}->{lane}")
+                if tel is not None:
+                    tel.count("exec.steals")
+                    tel.instant(f"steal:{task.name}", cat="steal",
+                                planned=task.device, chosen=lane,
+                                costs_s=costs)
+            if tel is not None:
+                tel.gauge(f"exec.queue_depth.{lane}", depth, t=now)
             queues[lane].put((task.priority, seq, task))
 
         def complete(task: ExecTask, value) -> None:
@@ -305,11 +342,25 @@ class AsyncExecutor:
                 _, _, task = q.get()
                 if task is None:
                     return
+                now = self.clock()
                 with lock:
                     est = queued[lane].pop(task.name, None)
+                    t_enq = enq_t.pop(task.name, None)
+                    depth = len(queued[lane])
                     if not abort.is_set():
                         running[task.name] = (lane, est or (lambda: 0.0),
-                                              self.clock())
+                                              now)
+                if tel is not None:
+                    tel.gauge(f"exec.queue_depth.{lane}", depth, t=now)
+                    if t_enq is not None:
+                        # queue wait: ready (deps resolved) -> lane free.
+                        # Transfers keyed per lane = the per-bus wait
+                        # histogram the contention model is judged by.
+                        wait = now - t_enq
+                        if task.kind == "transfer":
+                            tel.observe(f"exec.transfer_wait_s.{lane}", wait)
+                        else:
+                            tel.observe("exec.task_wait_s", wait)
                 if abort.is_set():
                     # abort cleanup: a skipped task's future must never be
                     # awaited into a hang — cancel it so readers raise
@@ -330,6 +381,8 @@ class AsyncExecutor:
                     self.tracer.record(task.name, task.kind, lane, t0, t1,
                                        note=f"stolen:{task.device}->{lane}"
                                        if stolen else "")
+                if tel is not None:
+                    tel.count(f"exec.{task.kind}_done")
                 if self.observe is not None and task.kind == "compute":
                     try:
                         self.observe(task, lane, t1 - t0)

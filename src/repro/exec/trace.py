@@ -14,12 +14,24 @@ like the predicted-schedule CSV ``repro.api.export.gantt_csv`` emits
 (task/device/start/finish line up; column 2 is the event *kind* here vs
 the kernel name there), so predicted and actual timelines sit side by
 side.
+
+All timestamps are raw clock values (``time.perf_counter`` by default)
+normalized at export against one *run epoch*: the executor captures
+``set_epoch(clock())`` once at run start, so the Chrome trace, the Gantt
+CSV, and any ``repro.obs.Telemetry`` recorded during the same run share
+a single time base instead of each export re-deriving its own zero from
+whichever event happened to start first.  ``to_chrome(telemetry=...)``
+merges that telemetry in: gauge series become Chrome counter tracks
+("C" events — queue depths, rolling MAPE) and telemetry span/instant
+events land on a dedicated ``telemetry`` thread row, all on the shared
+clock next to the task slices.
 """
 from __future__ import annotations
 
 import dataclasses
 import json
 import threading
+from typing import Optional
 
 
 @dataclasses.dataclass(frozen=True)
@@ -39,9 +51,17 @@ class TraceEvent:
 class ExecutionTrace:
     """Thread-safe accumulator of ``TraceEvent``s for one execution."""
 
-    def __init__(self):
+    def __init__(self, epoch: Optional[float] = None):
         self.events: list = []
+        self.epoch = epoch          # run time-base; None: derive from events
         self._lock = threading.Lock()
+
+    def set_epoch(self, t: float) -> None:
+        """Pin the run's time base (first caller wins — the executor calls
+        this once at run start, before any event is recorded, so every
+        export and merged telemetry stream shares one zero)."""
+        if self.epoch is None:
+            self.epoch = float(t)
 
     def record(self, name: str, kind: str, device: str,
                begin_s: float, end_s: float, note: str = "") -> None:
@@ -52,6 +72,8 @@ class ExecutionTrace:
     # -- summaries -----------------------------------------------------------
     @property
     def t0(self) -> float:
+        if self.epoch is not None:
+            return self.epoch
         return min(e.begin_s for e in self.events) if self.events else 0.0
 
     @property
@@ -77,17 +99,23 @@ class ExecutionTrace:
         return [e for e in self.by_start() if e.kind == "steal"]
 
     # -- exports -------------------------------------------------------------
-    def to_chrome(self) -> dict:
+    def to_chrome(self, telemetry=None) -> dict:
         """Chrome ``trace_event`` document: one "X" (complete) event per
         task, one tid per lane (named via metadata events), timestamps in
-        microseconds relative to the first begin."""
+        microseconds relative to the run epoch (or the first begin when no
+        epoch was pinned).
+
+        ``telemetry`` (a ``repro.obs.Telemetry`` recorded on the same
+        clock) folds in: every gauge series becomes a counter track ("C"
+        events — queue depth, rolling MAPE render as graphs above the
+        lanes) and telemetry instants/spans land on one extra
+        ``telemetry`` thread row (refits, gate rejections next to the
+        steal instants and task slices they explain)."""
         t0 = self.t0
         lanes = {d: i for i, d in enumerate(self.devices())}
-        events = [{"name": d, "ph": "M", "pid": 0, "tid": tid,
+        events = [{"name": "thread_name", "ph": "M", "pid": 0, "tid": tid,
                    "cat": "__metadata", "args": {"name": d}}
                   for d, tid in lanes.items()]
-        for m in events:
-            m["name"] = "thread_name"
         for e in self.by_start():
             if e.kind == "steal":
                 # re-dispatch decisions are instants, not spans
@@ -102,7 +130,32 @@ class ExecutionTrace:
             if e.note:
                 ev["args"] = {"note": e.note}
             events.append(ev)
+        if telemetry is not None:
+            events += self._telemetry_events(telemetry, t0, len(lanes))
         return {"traceEvents": events, "displayTimeUnit": "ms"}
+
+    @staticmethod
+    def _telemetry_events(telemetry, t0: float, tid: int) -> list:
+        events = [{"name": "thread_name", "ph": "M", "pid": 0, "tid": tid,
+                   "cat": "__metadata", "args": {"name": "telemetry"}}]
+        for name in telemetry.series_names():
+            for t, v in telemetry.series(name):
+                events.append({"name": name, "ph": "C", "pid": 0,
+                               "ts": (t - t0) * 1e6,
+                               "args": {"value": v}})
+        for e in telemetry.events():
+            if e["ph"] == "instant":
+                ev = {"name": e["name"], "cat": e["cat"], "ph": "i",
+                      "s": "t", "pid": 0, "tid": tid,
+                      "ts": (e["t0"] - t0) * 1e6}
+            else:
+                ev = {"name": e["name"], "cat": e["cat"], "ph": "X",
+                      "pid": 0, "tid": tid, "ts": (e["t0"] - t0) * 1e6,
+                      "dur": (e["t1"] - e["t0"]) * 1e6}
+            if e.get("args"):
+                ev["args"] = dict(e["args"])
+            events.append(ev)
+        return events
 
     def to_gantt_csv(self) -> str:
         """Measured-timeline CSV (task,kind,device,start_s,finish_s) —
@@ -115,9 +168,9 @@ class ExecutionTrace:
                          f"{e.begin_s - t0:.9f},{e.end_s - t0:.9f}")
         return "\n".join(lines) + "\n"
 
-    def save_chrome(self, path: str) -> None:
+    def save_chrome(self, path: str, telemetry=None) -> None:
         with open(path, "w") as f:
-            json.dump(self.to_chrome(), f, indent=1)
+            json.dump(self.to_chrome(telemetry=telemetry), f, indent=1)
 
     def save_gantt_csv(self, path: str) -> None:
         with open(path, "w") as f:

@@ -1,0 +1,19 @@
+"""repro.obs — run-scoped telemetry across dispatch, execution, and bench.
+
+One ``Telemetry`` per run collects counters/gauges/histograms, span and
+instant events on the executor's clock, and per-kernel prediction-drift
+status (live MAPE vs the fit-time band).  Every decision point in the
+stack reports into it when one is attached — dispatch modes and gate
+outcomes (``runtime.dispatch``), refits (``runtime.online``), steals,
+queue depths and transfer waits (``exec.executor``), comm-model pricing
+(``exec.comm``), and predicted-vs-realized makespans (``api.compile_``).
+``exec.ExecutionTrace.to_chrome(telemetry=...)`` merges gauge series as
+counter tracks and telemetry instants into the task timeline;
+``python -m repro.obs report`` summarizes a saved telemetry file and
+``--check`` gates on drift.
+"""
+from repro.obs.drift import DriftConfig, DriftMonitor
+from repro.obs.report import format_summary
+from repro.obs.telemetry import (NULL_TELEMETRY, OBS_SCHEMA_VERSION,
+                                 NullTelemetry, Telemetry, as_telemetry,
+                                 summarize_doc)

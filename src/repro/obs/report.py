@@ -1,0 +1,113 @@
+"""``python -m repro.obs report`` — render a saved telemetry file.
+
+    PYTHONPATH=src python -m repro.obs report results/telemetry_adaptive.json
+    PYTHONPATH=src python -m repro.obs report results/telemetry_*.json --check
+
+``report`` prints the standing summary (decision counts, histogram
+percentiles, overhead fractions, drift status) as text or ``--json``.
+``--check`` turns the report into a health gate: exit 1 when any
+kernel's live MAPE exceeds ``--factor`` (default 2.0) times its
+fit-time band — CI runs it as a non-blocking drift warning.  Exit 2
+means a file could not be loaded (tooling, not drift).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import sys
+
+from repro.obs.drift import DriftMonitor
+from repro.obs.telemetry import Telemetry, summarize_doc
+
+
+def format_summary(summary: dict, path: str = "") -> list:
+    """Human-readable rendering of ``summarize_doc`` output."""
+    lines = [f"== telemetry: {summary.get('run_id')}"
+             + (f" ({path})" if path else "") + " =="]
+    dec = summary.get("decisions", {})
+    if dec:
+        lines.append("decisions: " + "  ".join(
+            f"{k.split('.', 1)[1]}={v}" for k, v in sorted(dec.items())))
+    oh = summary.get("overhead", {})
+    if "dispatch_frac" in oh:
+        lines.append(f"dispatch overhead: {100 * oh['dispatch_frac']:.2f}% "
+                     "of dispatch+kernel wall")
+    ev = summary.get("events", {})
+    if ev:
+        lines.append("events: " + "  ".join(
+            f"{k}={v}" for k, v in sorted(ev.items())))
+    hists = summary.get("histograms", {})
+    if hists:
+        lines.append(f"{'histogram':34s} {'count':>7s} {'mean':>10s} "
+                     f"{'p50':>10s} {'p99':>10s} {'max':>10s}")
+        for name, h in hists.items():
+            if not h.get("count"):
+                continue
+            lines.append(
+                f"{name:34s} {h['count']:7d} {h['mean']:10.3g} "
+                f"{h.get('p50', float('nan')):10.3g} "
+                f"{h.get('p99', float('nan')):10.3g} {h['max']:10.3g}")
+    drift = summary.get("drift", {})
+    if drift:
+        lines.append(f"{'kernel':24s} {'live_mape%':>10s} {'fit_band%':>10s} "
+                     f"{'n':>5s} {'drift':>6s}")
+        for kernel, d in sorted(drift.items()):
+            lines.append(
+                f"{kernel:24s} {d['live_mape_pct']:10.2f} "
+                f"{d['fit_band_pct']:10.2f} {d['n']:5d} "
+                f"{'FLAG' if d['flagged'] else 'ok':>6s}")
+    flags = summary.get("drift_flags", [])
+    lines.append("drift flags: " + (", ".join(flags) if flags else "none"))
+    return lines
+
+
+def _check_flags(doc: dict, factor: float) -> list:
+    """Re-evaluate drift flags at the requested factor (the saved monitor
+    keeps raw residual windows, so the threshold is a read-time choice)."""
+    mon = DriftMonitor.from_json(doc.get("drift", {}))
+    mon.config = dataclasses.replace(mon.config, factor=factor)
+    return mon.flags()
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.obs")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+    rp = sub.add_parser("report", help="summarize saved telemetry files")
+    rp.add_argument("paths", nargs="+", help="telemetry JSON file(s)")
+    rp.add_argument("--json", action="store_true", dest="as_json",
+                    help="print the summary document instead of text")
+    rp.add_argument("--check", action="store_true",
+                    help="exit 1 when any kernel's live MAPE exceeds "
+                         "--factor times its fit band")
+    rp.add_argument("--factor", type=float, default=2.0,
+                    help="drift-flag threshold factor for --check")
+    args = ap.parse_args(argv)
+
+    flagged: list = []
+    summaries = {}
+    for path in args.paths:
+        try:
+            doc = Telemetry.load(path)
+        except (OSError, ValueError, json.JSONDecodeError) as e:
+            print(f"obs report: cannot load {path}: {e}", file=sys.stderr)
+            return 2
+        summary = summarize_doc(doc)
+        summaries[path] = summary
+        if args.check:
+            flagged += [f"{path}:{k}"
+                        for k in _check_flags(doc, args.factor)]
+        if not args.as_json:
+            for line in format_summary(summary, path=path):
+                print(line)
+    if args.as_json:
+        out = next(iter(summaries.values())) if len(summaries) == 1 \
+            else summaries
+        print(json.dumps(out, indent=1, sort_keys=True))
+    if args.check:
+        if flagged:
+            print(f"DRIFT: live MAPE > {args.factor:g}x fit band for: "
+                  + ", ".join(flagged))
+            return 1
+        print(f"drift check clean (factor {args.factor:g})")
+    return 0

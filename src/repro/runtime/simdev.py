@@ -90,9 +90,26 @@ class SkewedSimDispatcher(Dispatcher):
 
     def dispatch(self, kernel: str, *args, **kwargs):
         params = self.registry.get(kernel).params_of(*args, **kwargs)
-        time.sleep(self.true_time(kernel, params) * self.time_scale)
+        tel = self._telemetry
+        predicted = None
+        if tel is not None:
+            t0 = time.perf_counter()
+            predicted = float(self.predict_time(kernel, params))
+            overhead = time.perf_counter() - t0
+        true_s = self.true_time(kernel, params) * self.time_scale
+        time.sleep(true_s)
         aval = self.registry.out_aval(kernel, *args, **kwargs)
-        return np.zeros(tuple(aval.shape), np.dtype(str(aval.dtype)))
+        out = np.zeros(tuple(aval.shape), np.dtype(str(aval.dtype)))
+        if tel is not None:
+            # predicted-vs-TRUE residuals are this dispatcher's whole
+            # point: the drift monitor flags the lying cache, and the
+            # live-MAPE counter track decays as online refits correct it
+            tel.count("dispatch.predicted")
+            tel.observe("dispatch.overhead_s", overhead)
+            tel.observe(f"kernel.{kernel}.s", true_s)
+            tel.residual(kernel, predicted * self.time_scale, true_s,
+                         fit_band_pct=self._entry(kernel).fit_mape)
+        return out
 
     __call__ = dispatch
 

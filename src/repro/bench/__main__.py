@@ -1,7 +1,8 @@
-"""CLI: ``python -m repro.bench {run,adaptive,compare,history}``.
+"""CLI: ``python -m repro.bench {run,adaptive,serve,compare,history}``.
 
     PYTHONPATH=src python -m repro.bench run --quick
     PYTHONPATH=src python -m repro.bench adaptive --quick
+    PYTHONPATH=src python -m repro.bench serve --quick
     PYTHONPATH=src python -m repro.bench compare \\
         benchmarks/baseline_bench.json results/bench.json --only-kind sim
     PYTHONPATH=src python -m repro.bench history
@@ -51,6 +52,21 @@ def main(argv=None) -> int:
     adp.add_argument("--results-dir", default="results")
     adp.add_argument("--workloads", default=None)
     adp.add_argument("--size", choices=SIZES, default=None)
+
+    svp = sub.add_parser("serve",
+                         help="run the serving-engine arrival-trace "
+                              "scenario (FIFO vs cost-aware SJF "
+                              "admission) and merge it into bench.json "
+                              "as the schema-4 'serve' section; exit 1 "
+                              "when SJF fails to beat FIFO on the "
+                              "bursty trace")
+    svp.add_argument("--quick", action="store_true")
+    svp.add_argument("--out", default="results/bench.json",
+                     help="bench document to merge into when it exists "
+                          "(a standalone bench_serve.json is always "
+                          "written)")
+    svp.add_argument("--results-dir", default="results")
+    svp.add_argument("--seed", type=int, default=0)
 
     hp = sub.add_parser("history",
                         help="list saved bench.json documents (schema "
@@ -113,6 +129,18 @@ def main(argv=None) -> int:
         print(f"adaptive geomean speedup vs static replay: {g:.2f}x")
         print(f"merged adaptive section into {args.out}")
         return 0 if g > 1.0 else 1
+    if args.cmd == "serve":
+        from repro.bench.serve_trace import (run_serve, summarize_serve,
+                                             write_serve)
+        section = run_serve(quick=args.quick, results_dir=args.results_dir,
+                            seed=args.seed)
+        written = write_serve(section, out_path=args.out,
+                              results_dir=args.results_dir,
+                              quick=args.quick)
+        for line in summarize_serve(section):
+            print(line)
+        print(f"wrote serve section to {written}")
+        return 0 if section["sjf_beats_fifo_bursty"] else 1
     if args.cmd == "history":
         paths = discover(tuple(args.paths) if args.paths
                          else DEFAULT_PATTERNS)

@@ -31,7 +31,7 @@ def discover(patterns=DEFAULT_PATTERNS) -> list:
 
 
 def load_row(path: str) -> dict:
-    """One history row from a bench document, tolerant across schema 1-3.
+    """One history row from a bench document, tolerant across schema 1-4.
 
     Unreadable or non-bench files yield ``{"file", "error"}`` so the
     table can show them without aborting the rest."""
@@ -42,6 +42,15 @@ def load_row(path: str) -> dict:
         return {"file": path, "error": str(e)}
     if not isinstance(doc, dict) or not isinstance(doc.get("workloads"),
                                                    dict):
+        if isinstance(doc, dict) and isinstance(doc.get("serve"), dict):
+            # standalone bench_serve.json (schema 4, serve section only)
+            return {"file": path, "schema": doc.get("schema"),
+                    "quick": doc.get("quick"),
+                    "generated_unix": doc.get("generated_unix"),
+                    "n_workloads": 0, "geomean_vs_default": {},
+                    "drift_flags": [], "adaptive_geomean": None,
+                    "serve_sjf_wins":
+                        doc["serve"].get("sjf_beats_fifo_bursty")}
         return {"file": path, "error": "not a bench document"}
     flags = sorted({
         f"{cfg}:{k}"
@@ -49,7 +58,9 @@ def load_row(path: str) -> dict:
         for cfg, r in (w.get("configs") or {}).items() if isinstance(r, dict)
         for k in ((r.get("telemetry") or {}).get("drift_flags") or ())})
     ad = doc.get("adaptive") or {}
+    sv = doc.get("serve") or {}
     return {
+        "serve_sjf_wins": sv.get("sjf_beats_fifo_bursty"),
         "file": path,
         "schema": doc.get("schema"),
         "quick": doc.get("quick"),
@@ -86,6 +97,9 @@ def format_history(rows: list) -> list:
             f"{r['n_workloads']:3d} {len(r['drift_flags']):5d} "
             + (f"{ad:5.2f}x" if isinstance(ad, (int, float)) else f"{'-':>6s}")
             + f"  {geo}")
+        if r.get("serve_sjf_wins") is not None:
+            lines.append(f"{'':36s} serve: SJF beats FIFO on bursty: "
+                         + ("yes" if r["serve_sjf_wins"] else "NO"))
         for flag in r["drift_flags"]:
             lines.append(f"{'':36s} drift: {flag}")
     return lines

@@ -65,13 +65,33 @@ produced with telemetry disabled — stay loadable::
       # inside "adaptive":
       "telemetry_path": str               # saved obs.Telemetry JSON of the
                                           #   traced adaptive run
+
+Schema 4 adds the *optional* ``serve`` section — the serving-engine
+arrival-trace scenario (``python -m repro.bench serve``)::
+
+      "serve": {
+        "size": str,                      # "quick" | "full"
+        "model": str, "max_slots": int, "max_seq": int,
+        "cost_model": {"prefill_mape_pct": float,
+                        "decode_mape_pct": float},
+        "traces": {                       # one per arrival process
+          "<trace>": {"arrival": str, "n_requests": int,
+            "policies": {"fifo"|"sjf": {
+              "ttft_s": {"p50"|"p99"|"mean": float, "count": int},
+              "token_latency_s": {...},   # same stat shape
+              "goodput_tok_s": float,
+              "completed": int, "rejected": int,
+              "engine_steps": int, "occupancy": float,
+              "admission_fallback": bool}}}},
+        "sjf_beats_fifo_bursty": bool,    # p99 OR mean TTFT improved
+        "telemetry_path": str}            # saved obs.Telemetry JSON
 """
 from __future__ import annotations
 
 import json
 
-BENCH_SCHEMA_VERSION = 3
-ACCEPTED_SCHEMAS = (1, 2, 3)
+BENCH_SCHEMA_VERSION = 4
+ACCEPTED_SCHEMAS = (1, 2, 3, 4)
 MODES = ("best", "default", "worst")
 
 
@@ -213,6 +233,56 @@ def validate_bench(doc: dict) -> dict:
                      "telemetry_path requires schema >= 3")
             _require(isinstance(ad["telemetry_path"], str),
                      "$.adaptive.telemetry_path", "expected a string")
+
+    sv = doc.get("serve")
+    if sv is not None:                  # optional, schema-4 only
+        _require(doc["schema"] >= 4, "$.serve",
+                 "serve section requires schema >= 4")
+        _require(isinstance(sv, dict), "$.serve", "expected an object")
+        _require(isinstance(sv.get("size"), str), "$.serve.size",
+                 "expected a string")
+        _require(isinstance(sv.get("model"), str), "$.serve.model",
+                 "expected a string")
+        _num(sv, "$.serve", "max_slots", lo=1)
+        _num(sv, "$.serve", "max_seq", lo=1)
+        cm = sv.get("cost_model")
+        _require(isinstance(cm, dict), "$.serve.cost_model",
+                 "expected an object")
+        _num(cm, "$.serve.cost_model", "prefill_mape_pct", lo=0)
+        _num(cm, "$.serve.cost_model", "decode_mape_pct", lo=0)
+        traces = sv.get("traces")
+        _require(isinstance(traces, dict) and traces, "$.serve.traces",
+                 "expected a non-empty object")
+        for tname, t in traces.items():
+            tp = f"$.serve.traces.{tname}"
+            _require(isinstance(t.get("arrival"), str), f"{tp}.arrival",
+                     "expected a string")
+            _num(t, tp, "n_requests", lo=1)
+            pols = t.get("policies")
+            _require(isinstance(pols, dict) and pols, f"{tp}.policies",
+                     "expected a non-empty object")
+            for pol, r in pols.items():
+                pp = f"{tp}.policies.{pol}"
+                _require(pol in ("fifo", "sjf"), pp,
+                         "expected policy 'fifo' or 'sjf'")
+                for hist in ("ttft_s", "token_latency_s"):
+                    _require(isinstance(r.get(hist), dict), f"{pp}.{hist}",
+                             "expected an object")
+                    for stat in ("p50", "p99", "mean"):
+                        _num(r[hist], f"{pp}.{hist}", stat, lo=0)
+                    _num(r[hist], f"{pp}.{hist}", "count", lo=0)
+                _num(r, pp, "goodput_tok_s", lo=0)
+                _num(r, pp, "completed", lo=0)
+                _num(r, pp, "rejected", lo=0)
+                _num(r, pp, "engine_steps", lo=0)
+                _num(r, pp, "occupancy", lo=0)
+                _require(isinstance(r.get("admission_fallback"), bool),
+                         f"{pp}.admission_fallback", "expected bool")
+        _require(isinstance(sv.get("sjf_beats_fifo_bursty"), bool),
+                 "$.serve.sjf_beats_fifo_bursty", "expected bool")
+        if sv.get("telemetry_path") is not None:
+            _require(isinstance(sv["telemetry_path"], str),
+                     "$.serve.telemetry_path", "expected a string")
     return doc
 
 

@@ -42,6 +42,87 @@ def _causal_skip_possible(step: int, n: int, s_loc: int,
     return step > 0 and (n - step - 1) * s_loc >= q_offset
 
 
+def ring_decode(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                cache_index, *, mesh=None, axis_name: str = "model",
+                window: int = 0, start=None) -> jax.Array:
+    """Decode-time ring attention over a sequence-sharded KV cache.
+
+    q: [B,1,H,D]; caches: [B,Smax,KV,D] with ``cache_seq`` sharded over
+    ``axis_name`` (``serve_rules(long_context=True)``).  Unlike the
+    prefill ring, the KV shards never move: each device computes grouped
+    online-softmax *stats* (acc, m, l) over its resident shard and the
+    tiny [B,KV,G]-shaped stats rotate around the ring instead of the
+    multi-GB cache — per-step collective traffic is O(B*H*D), not
+    O(Smax*KV*D/n).
+
+    A shard whose keys are all masked for some row yields m = NEG_INF
+    (finite, so exp(m - m) = 1, no NaN); its poisoned (acc, l) are
+    annihilated by alpha = exp(NEG_INF - m_finite) = 0 when any visible
+    shard folds in, and the shard holding ``cache_index`` is always
+    visible.  Degenerates to ``attend_decode`` with no mesh, a 1-device
+    ring, or a cache length the ring cannot split evenly.
+    """
+    if mesh is None:
+        mesh = active_mesh()
+    b, one, h, d = q.shape
+    smax, kv = k_cache.shape[1], k_cache.shape[2]
+    sizes = _axis_sizes(mesh) if mesh is not None else {}
+    n = sizes.get(axis_name, 1)
+    if mesh is None or n <= 1 or smax % n != 0:
+        from repro.models.attention import attend_decode
+        return attend_decode(q, k_cache, v_cache, cache_index,
+                             window=window, start=start)
+    g = h // kv
+    s_loc = smax // n
+    scale = d ** -0.5
+    if start is None:
+        start = jnp.zeros((b,), jnp.int32)   # pos >= 0 is vacuous
+    cache_index = jnp.asarray(cache_index, jnp.int32)
+
+    kv_spec = P(None, axis_name, None, None)
+    rep4 = P(None, None, None, None)
+
+    def ringd(q_loc, k_loc, v_loc, idx0, start_loc):
+        idx = jax.lax.axis_index(axis_name)
+        pos = idx * s_loc + jnp.arange(s_loc)
+        visible = (pos <= idx0)[None, :] & (pos[None, :] >= start_loc[:, None])
+        if window > 0:
+            visible = visible & (pos > idx0 - window)[None, :]
+        q0 = q_loc[:, 0].reshape(b, kv, g, d)
+        sc = jnp.einsum("bkgd,btkd->bkgt", q0, k_loc
+                        ).astype(jnp.float32) * scale
+        sc = jnp.where(visible[:, None, None, :], sc, NEG_INF)
+        m = sc.max(axis=-1)                              # [B,KV,G]
+        p = jnp.exp(sc - m[..., None])
+        l = p.sum(axis=-1)
+        acc = jnp.einsum("bkgt,btkd->bkgd", p,
+                         v_loc.astype(jnp.float32))
+
+        def merge(a, b_):
+            acc1, m1, l1 = a
+            acc2, m2, l2 = b_
+            m_new = jnp.maximum(m1, m2)
+            a1 = jnp.exp(m1 - m_new)
+            a2 = jnp.exp(m2 - m_new)
+            return (acc1 * a1[..., None] + acc2 * a2[..., None],
+                    m_new, l1 * a1 + l2 * a2)
+
+        perm = [(j, (j + 1) % n) for j in range(n)]
+        run, vis = (acc, m, l), (acc, m, l)
+        for _ in range(1, n):
+            vis = jax.tree.map(
+                lambda t: jax.lax.ppermute(t, axis_name, perm), vis)
+            run = merge(run, vis)
+        acc, m, l = run
+        out = acc / jnp.maximum(l, 1e-30)[..., None]     # [B,KV,G,D]
+        return out.reshape(b, 1, h, d).astype(q_loc.dtype)
+
+    return compat.shard_map(
+        ringd, mesh,
+        in_specs=(rep4, kv_spec, kv_spec, P(), P(None)),
+        out_specs=rep4)(q, k_cache, v_cache, cache_index, start)
+
+
 def ring_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                    mesh=None, axis_name: str = "model", causal: bool = True,
                    window: int = 0, q_offset: int = 0) -> jax.Array:

@@ -266,9 +266,15 @@ def attention(cfg: ArchConfig, params: dict, x: jax.Array, *,
 def attention_decode_step(cfg: ArchConfig, params: dict, x: jax.Array,
                           cache: dict, cache_index: jax.Array, *,
                           window: int = 0, use_rope: bool = True,
-                          update_cache: bool = True,
-                          start=None) -> tuple[jax.Array, dict]:
-    """One decode step.  x:[B,1,d]; cache: {"k","v"}: [B,Smax,KV,D]."""
+                          update_cache: bool = True, start=None,
+                          stream_kv: bool = False) -> tuple[jax.Array, dict]:
+    """One decode step.  x:[B,1,d]; cache: {"k","v"}: [B,Smax,KV,D].
+
+    ``stream_kv`` routes the cache read through the decode ring
+    (``dist.ring_attention.ring_decode``): with ``serve_rules(
+    long_context=True)`` the ``cache_seq`` axis stays resident per device
+    and only softmax stats travel; without a mesh it falls back to the
+    dense ``attend_decode`` path unchanged."""
     dtype = x.dtype
     q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(dtype))
     k_new = jnp.einsum("bsd,dhk->bshk", x, params["wk"].astype(dtype))
@@ -297,8 +303,13 @@ def attention_decode_step(cfg: ArchConfig, params: dict, x: jax.Array,
             cache["v"], v_new.astype(cache["v"].dtype), cache_index, axis=1)
     else:                       # cross-attention: cache prefilled, never grows
         k_cache, v_cache = cache["k"], cache["v"]
-    out = attend_decode(q, k_cache.astype(dtype), v_cache.astype(dtype),
-                        cache_index, window=window, start=start)
+    if stream_kv:
+        from repro.dist.ring_attention import ring_decode
+        out = ring_decode(q, k_cache.astype(dtype), v_cache.astype(dtype),
+                          cache_index, window=window, start=start)
+    else:
+        out = attend_decode(q, k_cache.astype(dtype), v_cache.astype(dtype),
+                            cache_index, window=window, start=start)
     y = jnp.einsum("bshd,hdk->bsk", out.astype(dtype), params["wo"].astype(dtype))
     new_cache = {"k": k_cache, "v": v_cache} if update_cache else cache
     return y, new_cache

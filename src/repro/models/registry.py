@@ -157,10 +157,12 @@ class Model:
 
     # -- single-token decode -------------------------------------------------
     def decode_step(self, params: dict, cache: dict, tokens: jax.Array,
-                    cache_index: jax.Array,
-                    start=None) -> tuple[jax.Array, dict]:
+                    cache_index: jax.Array, start=None,
+                    stream_kv: bool = False) -> tuple[jax.Array, dict]:
         """tokens: [B,1] -> (logits [B,1,V], new cache).  ``start`` [B]
-        gives each slot's admission index (continuous batching)."""
+        gives each slot's admission index (continuous batching);
+        ``stream_kv`` reads sequence-sharded KV caches through the decode
+        ring (``serve_rules(long_context=True)``)."""
         cfg = self.cfg
         dtype = jnp.dtype(cfg.compute_dtype)
         x = embed(params["embed"], tokens, dtype)
@@ -169,7 +171,8 @@ class Model:
                 params["pos_embed"]["table"], cache_index, 1, axis=0
             ).astype(dtype)[None]
         x, new_cache = tfm.stack_decode(cfg, params["stack"], x, cache,
-                                        cache_index, start=start)
+                                        cache_index, start=start,
+                                        stream_kv=stream_kv)
         x = apply_norm(cfg.norm_kind, params["final_norm"], x, impl=cfg.norm_impl)
         logits = unembed(params.get("unembed", params["embed"]), x)
         return logits, new_cache

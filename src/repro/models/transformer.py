@@ -185,8 +185,8 @@ def block_prefill(cfg: ArchConfig, kind: str, params: dict, x: jax.Array, *,
 
 
 def block_decode(cfg: ArchConfig, kind: str, params: dict, x: jax.Array,
-                 cache: dict, cache_index: jax.Array,
-                 start=None) -> tuple[jax.Array, dict]:
+                 cache: dict, cache_index: jax.Array, start=None,
+                 stream_kv: bool = False) -> tuple[jax.Array, dict]:
     use_rope = cfg.positional == "rope"
     if kind == "mlstm":
         st = (cache["C"], cache["n"], cache["m"])
@@ -202,7 +202,7 @@ def block_decode(cfg: ArchConfig, kind: str, params: dict, x: jax.Array,
     kv_cache = {"k": cache["k"], "v": cache["v"]}
     a, kv_cache = attn.attention_decode_step(
         cfg, params["attn"], h, kv_cache, cache_index,
-        window=window, use_rope=use_rope, start=start)
+        window=window, use_rope=use_rope, start=start, stream_kv=stream_kv)
     new_cache = dict(cache)
     new_cache.update(kv_cache)
     if kind == "hybrid":
@@ -347,7 +347,8 @@ def stack_prefill(cfg: ArchConfig, params: dict, x: jax.Array, *,
 
 
 def stack_decode(cfg: ArchConfig, params: dict, x: jax.Array, cache: dict,
-                 cache_index: jax.Array, start=None) -> tuple[jax.Array, dict]:
+                 cache_index: jax.Array, start=None,
+                 stream_kv: bool = False) -> tuple[jax.Array, dict]:
     """Decode through the layer stack.
 
     The stacked cache rides in the scan CARRY and is updated in place with
@@ -368,7 +369,8 @@ def stack_decode(cfg: ArchConfig, params: dict, x: jax.Array, cache: dict,
                 lambda c: jax.lax.dynamic_index_in_dim(c, li, 0, keepdims=False),
                 cache_st[key])
             x, c_new = block_decode(cfg, kind, period_params[key], x,
-                                    layer_cache, cache_index, start=start)
+                                    layer_cache, cache_index, start=start,
+                                    stream_kv=stream_kv)
             cache_st = dict(cache_st)
             cache_st[key] = jax.tree.map(
                 lambda st, cn: jax.lax.dynamic_update_index_in_dim(
@@ -382,6 +384,7 @@ def stack_decode(cfg: ArchConfig, params: dict, x: jax.Array, cache: dict,
         new_cache["scan"] = scanned_cache
     for i, (key, p) in enumerate(sorted(params.get("tail", {}).items())):
         x, c = block_decode(cfg, _tail_kind(cfg, i), p, x,
-                            cache["tail"][key], cache_index, start=start)
+                            cache["tail"][key], cache_index, start=start,
+                            stream_kv=stream_kv)
         new_cache["tail"][key] = c
     return x, new_cache

@@ -3,26 +3,32 @@
 Slots share one global cache index; a request admitted at step t gets
 ``start[slot] = t`` — its stale cache region is masked by the attention
 visibility test and its rope positions are request-local, so NO cache reset
-or copy is needed on admission.  Prompt tokens are consumed one per step
-(piggyback/chunked prefill): a freshly admitted request "catches up" while
-other slots keep generating, which is exactly the orca-style schedule that
-keeps the decode batch full.
+or copy is needed on admission for KV-cache state.  Prompt tokens are
+consumed one per step (piggyback/chunked prefill): a freshly admitted
+request "catches up" while other slots keep generating, which is exactly
+the orca-style schedule that keeps the decode batch full.
 
-Admission order can be cost-aware: with a fitted NN+C step-time model the
-queue is served shortest-predicted-job-first (the paper's runtime mapping
-decision, §1).  The step-time predictor comes from the runtime tuning
-cache (``cost_model_from_cache``): serving records request wall times
-under the ``decode_step`` pseudo-kernel and every engine on the same
-hardware fingerprint shares the fitted model through the cache, instead
-of each fitting an ad-hoc model.
+Recurrent state (SSM/xLSTM/hybrid) has no positional masking to hide
+behind, so on admission the new tenant's slot is zeroed in every
+non-KV cache leaf (``_reset_slot``) — with that, any
+``layer_pattern`` of attn/local/moe/mlstm/slstm/hybrid blocks can
+continuously batch; only encoder-decoder archs are out.
 
-Restriction: attention-family archs (KV-cache state only).  Recurrent
-states (SSM/xLSTM) would need per-slot state resets on admission — noted in
-DESIGN.md as the extension point.
+Admission order can be cost-aware: with a fitted NN+C model the queue is
+served shortest-predicted-job-first (the paper's runtime mapping decision,
+§1).  The predictors live in the runtime tuning cache as the split
+``prefill_step``/``decode_step`` pseudo-kernels (see ``serve.policy``), so
+every engine on the same hardware fingerprint shares the fitted models.
+
+``ContinuousBatcher`` is the mechanism layer: queue/slot/token accounting
+with overridable hooks (``_order_queue``, ``_execute``, ``_on_admit``,
+``_on_token``, ``_on_done``).  ``serve.engine.ServeEngine`` builds the
+predictor-driven, telemetry-reporting engine on top of these hooks.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 from collections import deque
 from typing import Optional
 
@@ -31,57 +37,18 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.registry import Model
-from repro.runtime.cache import shape_bucket
+# Back-compat re-exports: the admission cost model moved to serve.policy
+# when the decode_step pseudo-kernel split into prefill_step/decode_step.
+from repro.serve.policy import (  # noqa: F401
+    ColdCacheError, DECODE_STEP_FEATURES, DECODE_STEP_KERNEL,
+    PREFILL_STEP_FEATURES, PREFILL_STEP_KERNEL, cost_model_from_cache,
+    record_request_time, split_cost_model_from_cache)
 
-# --------------------------------------------------------------------------
-# Runtime-cache-backed step-time predictor.  ``decode_step`` is a
-# prediction-only pseudo-kernel in the tuning cache: its rows are whole
-# request wall times, its c is the attention-dominated op count over the
-# generated region, and its fitted NN+C model orders the admission queue.
-# --------------------------------------------------------------------------
-
-DECODE_STEP_KERNEL = "decode_step"
-DECODE_STEP_FEATURES = ("prompt", "new")
-
-
-def decode_step_features(prompt_len: int, max_new: int) -> list:
-    """[prompt, new, c] — c counts attention work over the request's cache
-    region: each of the (prompt+new) consumed steps attends to an O(length)
-    prefix, so total ops grow ~ (prompt+new)^2."""
-    total = float(prompt_len + max_new)
-    return [float(prompt_len), float(max_new), total * total]
-
-
-def record_request_time(cache, prompt_len: int, max_new: int,
-                        seconds: float) -> None:
-    """Append one measured request to the cache's decode_step entry."""
-    entry = cache.entry(DECODE_STEP_KERNEL,
-                        feature_names=list(DECODE_STEP_FEATURES),
-                        variant_names=["engine"])
-    row = np.asarray([decode_step_features(prompt_len, max_new)])
-    entry.add_rows(row, [seconds],
-                   shape_bucket({"prompt": prompt_len, "new": max_new}))
-
-
-def cost_model_from_cache(cache, kernel: str = DECODE_STEP_KERNEL):
-    """Build the admission cost model from a runtime ``TuningCache``.
-
-    Returns ``cost(prompt_len, max_new) -> predicted seconds`` backed by the
-    cache's fitted NN+C state; raises ``ValueError`` when the cache is cold
-    (callers fall back to FIFO admission by passing ``cost_model=None``).
-    """
-    entry = cache.entry(kernel, feature_names=list(DECODE_STEP_FEATURES),
-                        variant_names=["engine"])
-    if entry.model is None:
-        raise ValueError(
-            f"tuning cache has no fitted {kernel!r} model yet — record "
-            "request times (record_request_time) and fit the entry first")
-
-    def cost(prompt_len: int, max_new: int) -> float:
-        row = np.asarray([decode_step_features(prompt_len, max_new)])
-        return float(entry.predict(row)[0])
-
-    return cost
+# cache leaves that are positional KV state (masked via start, never
+# reset); everything else is recurrent state and is zeroed on admission
+_KV_LEAVES = frozenset({"k", "v", "xk", "xv"})
+_RECURRENT_KINDS = frozenset({"mlstm", "slstm", "hybrid"})
+_SUPPORTED_KINDS = frozenset({"attn", "local", "moe"}) | _RECURRENT_KINDS
 
 
 @dataclasses.dataclass
@@ -94,18 +61,75 @@ class Request:
     done: bool = False
 
 
+# One jitted step per (model, stream_kv): engines sharing a model reuse the
+# same trace cache instead of paying a fresh jit per engine instance (the
+# serve bench builds several engines per process).  The model reference in
+# the value keeps the id() key stable for the cache's lifetime.
+_STEP_FNS: dict = {}
+
+
+def _jitted_step(model: Model, stream_kv: bool):
+    key = (id(model), bool(stream_kv))
+    hit = _STEP_FNS.get(key)
+    if hit is not None and hit[0] is model:
+        return hit[1]
+
+    def step_fn(params, cache, tokens, index, start):
+        logits, cache = model.decode_step(params, cache, tokens, index,
+                                          start=start, stream_kv=stream_kv)
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
+
+    fn = jax.jit(step_fn, donate_argnums=(1,))
+    _STEP_FNS[key] = (model, fn)
+    return fn
+
+
+def _zero_slot(tree: dict, slot, axis: int) -> dict:
+    out = {}
+    for name, leaf in tree.items():
+        if isinstance(leaf, dict):
+            out[name] = _zero_slot(leaf, slot, axis)
+        elif name in _KV_LEAVES:
+            out[name] = leaf
+        else:
+            row = jnp.zeros(leaf.shape[:axis] + leaf.shape[axis + 1:],
+                            leaf.dtype)
+            out[name] = jax.lax.dynamic_update_index_in_dim(
+                leaf, row, slot, axis)
+    return out
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _reset_slot(cache: dict, slot) -> dict:
+    """Zero one slot's recurrent state across the whole cache tree.  The
+    batch axis is 1 under "scan" (leaves are period-stacked) and 0 under
+    "tail"."""
+    new = {}
+    if "scan" in cache:
+        new["scan"] = {k: _zero_slot(v, slot, 1)
+                       for k, v in cache["scan"].items()}
+    new["tail"] = {k: _zero_slot(v, slot, 0)
+                   for k, v in cache["tail"].items()}
+    return new
+
+
 class ContinuousBatcher:
     def __init__(self, model: Model, params, *, max_slots: int,
-                 max_seq: int, cost_model=None):
+                 max_seq: int, cost_model=None, stream_kv: bool = False):
         cfg = model.cfg
-        assert not cfg.encdec and cfg.layer_pattern == ("attn",) or all(
-            k in ("attn", "local") for k in cfg.layer_pattern), \
-            "continuous batching supports attention-family archs"
+        assert not cfg.encdec, \
+            "continuous batching does not support encoder-decoder archs"
+        assert all(k in _SUPPORTED_KINDS for k in cfg.layer_pattern), \
+            f"continuous batching supports {sorted(_SUPPORTED_KINDS)} " \
+            f"blocks, got {cfg.layer_pattern}"
         self.model = model
         self.params = params
         self.max_slots = max_slots
         self.max_seq = max_seq
         self.cost_model = cost_model
+        self.stream_kv = bool(stream_kv)
+        self.recurrent = any(k in _RECURRENT_KINDS
+                             for k in cfg.layer_pattern)
         self.cache = model.init_cache(max_slots, max_seq)
         self.index = 0
         self.slots: list[Optional[Request]] = [None] * max_slots
@@ -114,28 +138,26 @@ class ContinuousBatcher:
         self.queue: deque[Request] = deque()
         self.steps = 0
         self.busy_slot_steps = 0
-
-        def step_fn(params, cache, tokens, index, start):
-            logits, cache = model.decode_step(params, cache, tokens, index,
-                                              start=start)
-            return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
-
-        self._step = jax.jit(step_fn, donate_argnums=(1,))
+        self._step = _jitted_step(model, self.stream_kv)
 
     # -- queue ---------------------------------------------------------------
     def submit(self, req: Request):
         self.queue.append(req)
 
-    def _admit(self):
-        free = [i for i, s in enumerate(self.slots) if s is None]
-        if not free or not self.queue:
-            return
+    def _order_queue(self) -> None:
+        """Reorder the waiting queue before admission (hook).  Base policy:
+        shortest-predicted-job-first when a cost model is set, else FIFO."""
         if self.cost_model is not None:
-            # shortest-predicted-job-first (NN+C runtime mapping)
             jobs = sorted(self.queue,
                           key=lambda r: self.cost_model(len(r.prompt),
                                                         r.max_new))
             self.queue = deque(jobs)
+
+    def _admit(self):
+        free = [i for i, s in enumerate(self.slots) if s is None]
+        if not free or not self.queue:
+            return
+        self._order_queue()
         for slot in free:
             if not self.queue:
                 break
@@ -146,14 +168,26 @@ class ContinuousBatcher:
             self.slots[slot] = req
             self.start[slot] = self.index
             self.prompt_left[slot] = len(req.prompt)
+            if self.recurrent:
+                # positional masking can't hide a previous tenant's
+                # recurrent state — zero the slot's non-KV leaves
+                self.cache = _reset_slot(self.cache, jnp.int32(slot))
+            self._on_admit(req, slot)
 
-    # -- one engine iteration --------------------------------------------------
-    def step(self) -> bool:
-        """Returns True while there is work."""
-        self._admit()
-        active = [i for i, s in enumerate(self.slots) if s is not None]
-        if not active and not self.queue:
-            return False
+    # -- hooks (no-ops here; ServeEngine instruments them) -------------------
+    def _on_admit(self, req: Request, slot: int) -> None:
+        pass
+
+    def _on_token(self, req: Request, slot: int, first: bool) -> None:
+        pass
+
+    def _on_done(self, req: Request, slot: int) -> None:
+        pass
+
+    # -- one engine iteration ------------------------------------------------
+    def _assemble(self, active: list) -> np.ndarray:
+        """Token batch for this iteration: the next prompt token for slots
+        still prefilling, else the last generated token."""
         tokens = np.zeros((self.max_slots, 1), np.int32)
         for i in active:
             req = self.slots[i]
@@ -162,22 +196,46 @@ class ContinuousBatcher:
                 tokens[i, 0] = req.prompt[consumed]
             else:
                 tokens[i, 0] = req.generated[-1]
+        return tokens
+
+    def _execute(self, tokens: np.ndarray) -> np.ndarray:
+        """Run one model step (hook — ServeEngine routes this through a
+        compiled ``repro.api`` program on the executor)."""
         next_tok, self.cache = self._step(
             self.params, self.cache, jnp.asarray(tokens),
             jnp.int32(self.index), jnp.asarray(self.start))
-        next_tok = np.asarray(next_tok)
+        return np.asarray(next_tok)
+
+    def step(self) -> bool:
+        """Returns True while there is work."""
+        self._admit()
+        active = [i for i, s in enumerate(self.slots) if s is not None]
+        if not active:
+            if not self.queue:
+                return False
+            # every slot is drained but the queue head would overflow the
+            # shared cache region: all positions are dead tenants, so the
+            # region is reclaimable — rewind and re-admit.
+            self.index = 0
+            self._admit()
+            active = [i for i, s in enumerate(self.slots) if s is not None]
+            if not active:       # a request that can never fit
+                return False
+        tokens = self._assemble(active)
+        next_tok = self._execute(tokens)
         for i in active:
             req = self.slots[i]
             if self.prompt_left[i] > 1:
                 self.prompt_left[i] -= 1          # still prefilling: ignore
-            elif self.prompt_left[i] == 1:
-                self.prompt_left[i] = 0           # last prompt token: first gen
-                req.generated.append(int(next_tok[i, 0]))
             else:
+                if self.prompt_left[i] == 1:
+                    self.prompt_left[i] = 0       # last prompt token
                 req.generated.append(int(next_tok[i, 0]))
+                self._on_token(req, i, first=len(req.generated) == 1)
             if len(req.generated) >= req.max_new:
                 req.done = True
                 self.slots[i] = None
+                self._on_done(req, i)
         self.index += 1
         self.steps += 1
         self.busy_slot_steps += len(active)

@@ -320,7 +320,8 @@ def test_cost_model_from_cache_orders_requests(tmp_path):
         record_request_time(cache, plen, mnew, t)
     with pytest.raises(ValueError):
         cost_model_from_cache(cache)                 # not fitted yet
-    cache.entry("decode_step").fit(model=LinearModel())
+    for kernel in ("prefill_step", "decode_step"):
+        cache.entry(kernel).fit(model=LinearModel())
     cache.save()
 
     cost = cost_model_from_cache(TuningCache(root=str(tmp_path / "tc")))

@@ -54,6 +54,8 @@ from repro.exec.buffers import (BufferTable, Transfer, plan_buffers,
 from repro.exec.executor import AsyncExecutor, ExecTask, StealPolicy
 from repro.exec.trace import ExecutionTrace
 from repro.kernels import Aval
+from repro.obs.memory import (MemoryLedger, check_capacity, fold_memory,
+                              memory_plan, predicted_peak_bytes)
 from repro.runtime.cache import shape_bucket, shape_class
 from repro.runtime.online import OnlineConfig, OnlineRefiner
 
@@ -143,17 +145,27 @@ def compile_program(program: Program, devices=None, policy=None,
         refiners = {name: OnlineRefiner(disp.cache, config,
                                         telemetry=telemetry)
                     for name, disp in dispatchers.items()}
+    buffers = plan_buffers(program, assignments, input_homes=homes,
+                           topology=topology)
+    order = execution_order(tasks, assignments)
+    # the memory ledger's compile half: derive the accounting plan from
+    # the value homes, replay it over the frozen order for the predicted
+    # per-device peak, and refuse placements that cannot fit a device's
+    # advertised capacity — typed failure now beats an OOM mid-run
+    plan = memory_plan(program, buffers)
+    predicted_peak = predicted_peak_bytes(plan, order, buffers)
+    check_capacity(predicted_peak, dispatchers)
     return CompiledProgram(program=program, dispatchers=dispatchers,
                            assignments=assignments,
                            bindings=dict(bindings or {}),
-                           order=execution_order(tasks, assignments),
+                           order=order,
                            executor=executor, comm=comm_fn,
-                           buffers=plan_buffers(program, assignments,
-                                                input_homes=homes,
-                                                topology=topology),
+                           buffers=buffers,
                            transfer=transfer, topology=topology,
                            steal=steal, refiners=refiners,
-                           telemetry=telemetry)
+                           telemetry=telemetry,
+                           memory=plan,
+                           predicted_peak_bytes=predicted_peak)
 
 
 @dataclasses.dataclass
@@ -174,7 +186,12 @@ class CompiledProgram:
     #   device name -> OnlineRefiner; non-empty enables execution feedback
     telemetry: Optional[object] = None    # repro.obs.Telemetry (or None):
     #   per-call predicted-vs-realized makespan + executor decision events
+    memory: Optional[object] = None       # obs.memory.MemoryPlan: the
+    #   plan-derived ref-count table both ledger sides account from
+    predicted_peak_bytes: dict = dataclasses.field(default_factory=dict)
+    #   device -> compile-time predicted peak bytes (EFT-order replay)
     last_trace: Optional[ExecutionTrace] = None  # set by every execution
+    last_memory: Optional[MemoryLedger] = None   # measured ledger, per call
 
     @property
     def makespan(self) -> float:
@@ -252,7 +269,7 @@ class CompiledProgram:
         return env
 
     # -- execution back ends -------------------------------------------------
-    def _run_sequential(self, env) -> None:
+    def _run_sequential(self, env, ledger=None) -> None:
         """The reference bridge: frozen start-time order, calling thread."""
         tracer = ExecutionTrace()
         # installed up front so a mid-run failure leaves the partial trace
@@ -260,13 +277,27 @@ class CompiledProgram:
         self.last_trace = tracer
         tracer.set_epoch(time.perf_counter())
         node_by = {n.name: n for n in self.program.nodes}
+        landed: set = set()
         for task in self.order:
             node = node_by[task.name]
             dev = self.assignments[task.name].device
+            if ledger is not None:
+                # host-resident values need no physical moves here, but the
+                # ledger accounts the planned transfer as landing just
+                # before its first consumer — the same event order the
+                # compile-time predicted peak replayed, so sequential
+                # measured peaks match the prediction exactly
+                for d in node.deps:
+                    tr = self.buffers.transfer_for(d, dev)
+                    if tr is not None and tr.name not in landed:
+                        landed.add(tr.name)
+                        ledger.transfer_done(tr.name)
             t0 = time.perf_counter()
             env[task.name] = self.dispatchers[dev].dispatch(
                 node.kernel, *(env[d] for d in node.deps), **node.kwargs)
             tracer.record(task.name, "compute", dev, t0, time.perf_counter())
+            if ledger is not None:
+                ledger.node_done(task.name)
 
     # -- adaptive helpers ----------------------------------------------------
     @staticmethod
@@ -428,24 +459,43 @@ class CompiledProgram:
                                   **extra))
         return tasks
 
-    def _run_async(self, env) -> None:
+    @staticmethod
+    def _memory_hook(ledger) -> Optional[Callable]:
+        """Executor ``(task, lane) -> None`` hook routing completions into
+        the run's ledger.  Keyed by task name against the *plan* (stolen
+        tasks account at their planned home — value homes are plan
+        properties, a steal's inline move is extra traffic, not a
+        re-homing)."""
+        if ledger is None:
+            return None
+
+        def hook(task: ExecTask, lane: str) -> None:
+            if task.kind == "transfer":
+                ledger.transfer_done(task.name)
+            else:
+                ledger.node_done(task.name)
+        return hook
+
+    def _run_async(self, env, ledger=None) -> None:
         tracer = ExecutionTrace()
         self.last_trace = tracer       # pre-installed: failures keep the
                                        # partial trace of the dying run
         results = AsyncExecutor(tracer=tracer,
-                                telemetry=self.telemetry).run(
+                                telemetry=self.telemetry,
+                                memory=self._memory_hook(ledger)).run(
             self._exec_tasks(env), lane_width=self._lane_widths())
         for node in self.program.nodes:
             env[node.name] = results[node.name]
 
-    def _run_adaptive(self, env) -> None:
+    def _run_adaptive(self, env, ledger=None) -> None:
         tracer = ExecutionTrace()
         self.last_trace = tracer
         executor = AsyncExecutor(tracer=tracer,
                                  steal=self.steal or StealPolicy(),
                                  comm=self.comm,
                                  observe=self._observe_hook(),
-                                 telemetry=self.telemetry)
+                                 telemetry=self.telemetry,
+                                 memory=self._memory_hook(ledger))
         results = executor.run(self._exec_tasks(env, adaptive=True),
                                lane_width=self._lane_widths())
         for node in self.program.nodes:
@@ -462,13 +512,19 @@ class CompiledProgram:
             raise ValueError(f"executor must be one of {EXECUTORS}, "
                              f"got {mode!r}")
         env = self._bind(args, named)
+        ledger = None
+        if self.memory is not None:
+            ledger = MemoryLedger(self.memory, telemetry=self.telemetry)
+            self.last_memory = ledger
+            ledger.start()
         t0 = time.perf_counter()
         if mode == "adaptive":
-            self._run_adaptive(env)
+            self._run_adaptive(env, ledger)
         elif mode == "async":
-            self._run_async(env)
+            self._run_async(env, ledger)
         else:
-            self._run_sequential(env)
+            self._run_sequential(env, ledger)
+        fold_memory(self.telemetry, ledger, self.predicted_peak_bytes)
         if self.telemetry is not None:
             wall = time.perf_counter() - t0
             predicted = self.makespan

@@ -76,6 +76,9 @@ def main(argv=None) -> int:
     hp.add_argument("paths", nargs="*",
                     help="files or globs (default: "
                          + " ".join(DEFAULT_PATTERNS) + ")")
+    hp.add_argument("--json", action="store_true", dest="as_json",
+                    help="print the rows as a JSON list (the dashboard "
+                         "and external tooling consume this)")
 
     cmpp = sub.add_parser("compare",
                           help="diff two bench.json files; exit 1 on "
@@ -148,8 +151,12 @@ def main(argv=None) -> int:
             print("bench history: no bench documents found",
                   file=sys.stderr)
             return 2
-        for line in format_history([load_row(p) for p in paths]):
-            print(line)
+        rows = [load_row(p) for p in paths]
+        if args.as_json:
+            print(json.dumps(rows, indent=1, sort_keys=True))
+        else:
+            for line in format_history(rows):
+                print(line)
         return 0
     try:
         baseline = load_bench(args.baseline)

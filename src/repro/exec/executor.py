@@ -122,13 +122,20 @@ class AsyncExecutor:
                  comm: Optional[Callable[[str, str, float], float]] = None,
                  observe: Optional[Callable[[ExecTask, str, float],
                                             None]] = None,
-                 telemetry=None):
+                 telemetry=None,
+                 memory: Optional[Callable[[ExecTask, str], None]] = None):
         self.tracer = tracer
         self.clock = clock
         self.steal = steal
         self.comm = comm
         self.observe = observe
         self.telemetry = telemetry
+        # memory-ledger hook: called (task, lane) after EVERY completed
+        # task (compute and transfer), before dependents fire — the
+        # ordering guarantee the ref-counted accounting relies on (a
+        # transfer must never release its source before the producer's
+        # completion alloc'd it)
+        self.memory = memory
 
     # -- validation ----------------------------------------------------------
     @staticmethod
@@ -386,6 +393,12 @@ class AsyncExecutor:
                 if self.observe is not None and task.kind == "compute":
                     try:
                         self.observe(task, lane, t1 - t0)
+                    except BaseException as exc:  # noqa: BLE001
+                        fail(task, exc)
+                        continue
+                if self.memory is not None:
+                    try:
+                        self.memory(task, lane)
                     except BaseException as exc:  # noqa: BLE001
                         fail(task, exc)
                         continue

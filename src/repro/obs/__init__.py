@@ -11,9 +11,23 @@ queue depths and transfer waits (``exec.executor``), comm-model pricing
 counter tracks and telemetry instants into the task timeline;
 ``python -m repro.obs report`` summarizes a saved telemetry file and
 ``--check`` gates on drift.
+
+The second layer rides on the same document: the memory ledger
+(``obs.memory``) accounts per-device live/peak bytes against the
+compile-time predicted peak, model cards (``obs.cards``) fold tunecache
+coverage with live accuracy per predictor, SLOs (``obs.slo``) price
+latency objectives with burn rates, and ``obs.dashboard`` renders it all
+as one self-contained static HTML file.
 """
+from repro.obs.cards import build_cards, format_cards
+from repro.obs.dashboard import render_dashboard, write_dashboard
 from repro.obs.drift import DriftConfig, DriftMonitor
+from repro.obs.memory import (MemoryCapacityError, MemoryLedger, MemoryPlan,
+                              check_capacity, memory_plan,
+                              predicted_peak_bytes)
 from repro.obs.report import format_summary
+from repro.obs.slo import (DEFAULT_SERVE_SLOS, SLO, burned, evaluate_slos,
+                           format_slos, load_slos)
 from repro.obs.telemetry import (NULL_TELEMETRY, OBS_SCHEMA_VERSION,
                                  NullTelemetry, Telemetry, as_telemetry,
                                  summarize_doc)

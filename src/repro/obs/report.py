@@ -1,14 +1,24 @@
-"""``python -m repro.obs report`` — render a saved telemetry file.
+"""``python -m repro.obs {report,cards,dashboard}`` — the obs CLI.
 
     PYTHONPATH=src python -m repro.obs report results/telemetry_adaptive.json
     PYTHONPATH=src python -m repro.obs report results/telemetry_*.json --check
+    PYTHONPATH=src python -m repro.obs report results/telemetry_serve.json \\
+        --slo [slo_spec.json]
+    PYTHONPATH=src python -m repro.obs cards [--json]
+    PYTHONPATH=src python -m repro.obs dashboard -o results/dashboard.html
 
 ``report`` prints the standing summary (decision counts, histogram
 percentiles, overhead fractions, drift status) as text or ``--json``.
 ``--check`` turns the report into a health gate: exit 1 when any
 kernel's live MAPE exceeds ``--factor`` (default 2.0) times its
-fit-time band — CI runs it as a non-blocking drift warning.  Exit 2
-means a file could not be loaded (tooling, not drift).
+fit-time band — CI runs it as a non-blocking drift warning.  ``--slo``
+evaluates an SLO set (a JSON spec path, or the default serve set)
+against the loaded telemetry: exit 1 when any evaluated SLO burns.
+Exit 2 means a file could not be loaded (tooling, not drift/burn).
+
+``cards`` renders one predictor model card per (kernel, fingerprint) in
+the tunecache (``obs.cards``); ``dashboard`` writes the self-contained
+static HTML dashboard (``obs.dashboard``).
 """
 from __future__ import annotations
 
@@ -18,6 +28,8 @@ import json
 import sys
 
 from repro.obs.drift import DriftMonitor
+from repro.obs.slo import (DEFAULT_SERVE_SLOS, burned, evaluate_slos,
+                           format_slos, load_slos)
 from repro.obs.telemetry import Telemetry, summarize_doc
 
 
@@ -82,9 +94,48 @@ def main(argv=None) -> int:
                          "--factor times its fit band")
     rp.add_argument("--factor", type=float, default=2.0,
                     help="drift-flag threshold factor for --check")
+    rp.add_argument("--slo", nargs="?", const="", default=None,
+                    metavar="SPEC",
+                    help="evaluate an SLO set against the telemetry and "
+                         "exit 1 on any burn; SPEC is a JSON spec file "
+                         "(omit it for the default serve SLOs)")
+
+    cp = sub.add_parser("cards", help="render predictor model cards from "
+                                      "the tunecache + saved telemetry")
+    cp.add_argument("--json", action="store_true", dest="as_json")
+    cp.add_argument("--root", default=None,
+                    help="tunecache root (default results/tunecache)")
+    cp.add_argument("--telemetry", nargs="*", default=None,
+                    metavar="GLOB",
+                    help="telemetry file globs folded into the cards "
+                         "(default results/telemetry_*.json)")
+
+    dp = sub.add_parser("dashboard",
+                        help="write the self-contained static HTML "
+                             "dashboard (no external requests)")
+    dp.add_argument("-o", "--out", default="results/dashboard.html")
+    dp.add_argument("--results-dir", default="results",
+                    help="directory scanned for bench/telemetry "
+                         "documents and the tunecache")
+    dp.add_argument("--slo", default=None, metavar="SPEC",
+                    help="SLO JSON spec (default: the serve set)")
+
     args = ap.parse_args(argv)
+    if args.cmd == "cards":
+        return _cards_main(args)
+    if args.cmd == "dashboard":
+        return _dashboard_main(args)
+
+    slos = None
+    if args.slo is not None:
+        try:
+            slos = load_slos(args.slo) if args.slo else DEFAULT_SERVE_SLOS
+        except (OSError, ValueError) as e:
+            print(f"obs report: cannot load SLO spec: {e}", file=sys.stderr)
+            return 2
 
     flagged: list = []
+    burns: list = []
     summaries = {}
     for path in args.paths:
         try:
@@ -100,14 +151,57 @@ def main(argv=None) -> int:
         if not args.as_json:
             for line in format_summary(summary, path=path):
                 print(line)
+        if slos is not None:
+            results = evaluate_slos(slos, doc)
+            burns += [f"{path}:{r['slo']}" for r in burned(results)]
+            if not args.as_json:
+                for line in format_slos(results, path=path):
+                    print(line)
     if args.as_json:
         out = next(iter(summaries.values())) if len(summaries) == 1 \
             else summaries
         print(json.dumps(out, indent=1, sort_keys=True))
+    rc = 0
     if args.check:
         if flagged:
             print(f"DRIFT: live MAPE > {args.factor:g}x fit band for: "
                   + ", ".join(flagged))
-            return 1
-        print(f"drift check clean (factor {args.factor:g})")
+            rc = 1
+        else:
+            print(f"drift check clean (factor {args.factor:g})")
+    if slos is not None:
+        if burns:
+            print("SLO BURN: " + ", ".join(burns))
+            rc = 1
+        else:
+            print("all evaluated SLOs met")
+    return rc
+
+
+def _cards_main(args) -> int:
+    from repro.obs.cards import (DEFAULT_TELEMETRY_PATTERNS, build_cards,
+                                 format_cards)
+    from repro.runtime.cache import DEFAULT_ROOT
+    cards = build_cards(
+        cache_root=args.root or DEFAULT_ROOT,
+        telemetry_patterns=tuple(args.telemetry)
+        if args.telemetry else DEFAULT_TELEMETRY_PATTERNS)
+    if args.as_json:
+        print(json.dumps(cards, indent=1, sort_keys=True))
+    else:
+        for line in format_cards(cards):
+            print(line)
+    return 0
+
+
+def _dashboard_main(args) -> int:
+    from repro.obs.dashboard import write_dashboard
+    try:
+        slos = load_slos(args.slo) if args.slo else None
+    except (OSError, ValueError) as e:
+        print(f"obs dashboard: cannot load SLO spec: {e}", file=sys.stderr)
+        return 2
+    path = write_dashboard(args.out, results_dir=args.results_dir,
+                           slos=slos)
+    print(f"wrote {path}")
     return 0

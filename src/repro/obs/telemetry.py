@@ -35,6 +35,7 @@ from __future__ import annotations
 
 import contextlib
 import json
+import os
 import threading
 import time
 from collections import deque
@@ -187,9 +188,14 @@ class Telemetry:
             }
 
     def save(self, path: str) -> None:
+        """Atomic write (temp file + ``os.replace``): a reader that races a
+        mid-run save sees either the previous complete document or the new
+        one, never a truncated file ``load`` would exit-2 on."""
         doc = self.to_json()
-        with open(path, "w") as f:
+        tmp = f"{path}.tmp"
+        with open(tmp, "w") as f:
             json.dump(doc, f, indent=1)
+        os.replace(tmp, path)
 
     @staticmethod
     def load(path: str) -> dict:

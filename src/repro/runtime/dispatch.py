@@ -174,6 +174,7 @@ class Dispatcher:
                     self.n_predicted += 1
                     if gate and tel is not None:
                         tel.count("gate.accept")
+                        tel.count(f"gate.by_kernel.{kernel}.accept")
                 else:
                     # unseen shape class + near-tie: measure the top-2
                     cand = [int(i)
@@ -185,6 +186,7 @@ class Dispatcher:
                     self.n_gated += 1
                     if tel is not None:
                         tel.count("gate.reject")
+                        tel.count(f"gate.by_kernel.{kernel}.reject")
                         tel.instant(f"gate:{kernel}", cat="gate",
                                     kernel=kernel, reason="near_tie",
                                     spread_pct=100.0 * spread,
@@ -223,6 +225,10 @@ class Dispatcher:
                 predicted_s=predicted[chosen.name] if predicted else None)
         if tel is not None:
             tel.count(f"dispatch.{mode}")
+            # per-kernel decision mix: the model-card surface (obs.cards)
+            # reads these prefixed counters to split the global mix by
+            # kernel without touching the bounded Selection log
+            tel.count(f"dispatch.by_kernel.{kernel}.{mode}")
             if memo_hit:
                 tel.count("dispatch.memo_hit")
             tel.observe("dispatch.overhead_s", overhead)

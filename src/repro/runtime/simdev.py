@@ -35,11 +35,19 @@ from repro.runtime.fingerprint import Fingerprint
 
 class SimDispatcher(Dispatcher):
     """Dispatcher that sleeps each kernel's predicted time before running
-    it — a device that is exactly as fast as its tuning cache claims."""
+    it — a device that is exactly as fast as its tuning cache claims.
 
-    def __init__(self, *args, time_scale: float = 1.0, **kwargs):
+    ``capacity_bytes`` advertises a finite device memory: ``compile_program``
+    checks the plan's predicted per-device peak against it and raises a
+    typed ``obs.memory.MemoryCapacityError`` for placements that cannot
+    fit (None — the default — is unconstrained)."""
+
+    def __init__(self, *args, time_scale: float = 1.0,
+                 capacity_bytes=None, **kwargs):
         super().__init__(*args, **kwargs)
         self.time_scale = time_scale
+        self.capacity_bytes = None if capacity_bytes is None \
+            else int(capacity_bytes)
 
     def dispatch(self, kernel: str, *args, **kwargs):
         params = self.registry.get(kernel).params_of(*args, **kwargs)
@@ -51,10 +59,12 @@ def fake_matmul_device(root: str, name: str, flops_per_s: float,
                        registry, seed: int = 0,
                        simulate_time: bool = False,
                        time_scale: float = 1.0,
-                       policy=None) -> Dispatcher:
+                       policy=None, capacity_bytes=None) -> Dispatcher:
     """A matmul-tuned dispatcher running at ``flops_per_s`` sustained.
     With ``simulate_time`` the returned dispatcher also *takes* the
-    predicted time per dispatch (see ``SimDispatcher``)."""
+    predicted time per dispatch (see ``SimDispatcher``);
+    ``capacity_bytes`` bounds the simulated device's memory (enforced at
+    compile via the predicted memory peak)."""
     fp = Fingerprint("sim", name, 1, 1, ("float32",))
     cache = TuningCache(root=root, fingerprint=fp)
     rk = registry.get("matmul")
@@ -70,8 +80,12 @@ def fake_matmul_device(root: str, name: str, flops_per_s: float,
     cache.save()
     if simulate_time:
         return SimDispatcher(registry=registry, cache=cache, policy=policy,
-                             time_scale=time_scale)
-    return Dispatcher(registry=registry, cache=cache, policy=policy)
+                             time_scale=time_scale,
+                             capacity_bytes=capacity_bytes)
+    disp = Dispatcher(registry=registry, cache=cache, policy=policy)
+    if capacity_bytes is not None:
+        disp.capacity_bytes = int(capacity_bytes)
+    return disp
 
 
 class SkewedSimDispatcher(Dispatcher):

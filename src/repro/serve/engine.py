@@ -105,7 +105,31 @@ class ServeEngine(ContinuousBatcher):
                          stream_kv=stream_kv)
         self.completed: list = []
         self.rejected: list = []
+        # KV/slot byte gauges for the memory ledger surface: the cache is
+        # preallocated for max_slots, so totals are static per engine;
+        # serve.kv_live_bytes tracks the occupied-slot share on
+        # admit/release (the number a capacity-aware admission would gate
+        # on).  KV leaves are the per-position k/v planes; everything else
+        # in the cache tree is recurrent per-slot state.
+        self.kv_cache_bytes, self.slot_bytes = self._cache_bytes()
+        self.telemetry.gauge("serve.kv_cache_bytes", self.kv_cache_bytes)
+        self.telemetry.gauge("serve.kv_slot_bytes", self.slot_bytes)
+        self.telemetry.gauge("serve.kv_live_bytes", 0)
         self._compiled = self._compile_step(executor)
+
+    # -- memory accounting ---------------------------------------------------
+    def _cache_bytes(self) -> tuple:
+        """``(total cache bytes, per-slot bytes)`` of the preallocated
+        model cache tree (KV planes + recurrent state, all slot-major)."""
+        leaves = jax.tree_util.tree_leaves(self.cache)
+        total = int(sum(x.size * jnp.dtype(x.dtype).itemsize
+                        for x in leaves))
+        return total, total // max(self.max_slots, 1)
+
+    def _gauge_kv_live(self) -> None:
+        active = sum(1 for s in self.slots if s is not None)
+        self.telemetry.gauge("serve.kv_live_bytes",
+                             active * self.slot_bytes)
 
     # -- predictions ---------------------------------------------------------
     def predict_ttft_s(self, prompt_len: int) -> Optional[float]:
@@ -211,6 +235,7 @@ class ServeEngine(ContinuousBatcher):
         req.slot = slot
         submitted = getattr(req, "submitted_s", None)
         self.telemetry.gauge("serve.queue_depth", len(self.queue))
+        self._gauge_kv_live()
         self.telemetry.instant(
             f"admission:{req.rid}", cat="admission", rid=req.rid,
             slot=slot, policy=self.policy_name,
@@ -247,6 +272,7 @@ class ServeEngine(ContinuousBatcher):
                                     now - admitted, fit_band_pct=band)
         if self.record_rows:
             self._record_split_rows(req, now)
+        self._gauge_kv_live()
 
     def _record_split_rows(self, req, now: float) -> None:
         """Split the completed request's measured wall time into one

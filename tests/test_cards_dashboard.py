@@ -1,0 +1,201 @@
+"""obs.cards + obs.slo + obs.dashboard: model-card coverage over a warmed
+tunecache, telemetry folding (live MAPE, calibration, decision mix), the
+SLO burn gate's exit codes, the bench-history ``--json`` surface, and the
+self-contained offline dashboard render from the committed sample
+results."""
+import glob
+import json
+import os
+
+import pytest
+
+from repro.obs import SLO, Telemetry, evaluate_slos
+from repro.obs.cards import build_cards, format_cards
+from repro.obs.dashboard import render_dashboard, write_dashboard
+from repro.obs.report import main as report_main
+from repro.runtime import Dispatcher, Fingerprint, TuningCache
+from repro.runtime.seeding import seed_from_programs
+from repro.workloads import get_workload, suite_registry
+
+SAMPLE_RESULTS = "benchmarks/sample_results"
+
+
+def _warm_cache(tmp_path, workload="image_pipeline"):
+    """Seed + fit a multi-kernel tunecache off a bench workload."""
+    reg = suite_registry([workload])
+    built = get_workload(workload).build("small", registry=reg)
+    fp = Fingerprint("sim", "cards", 1, 1, ("float32",))
+    root = str(tmp_path / "tc")
+    cache = TuningCache(root=root, fingerprint=fp)
+    kernels = seed_from_programs(Dispatcher(registry=reg, cache=cache),
+                                 [built.program], 1e9, reset=True)
+    return root, fp, sorted(kernels)
+
+
+# --------------------------------------------------------------------------
+# model cards
+# --------------------------------------------------------------------------
+
+def test_cards_cover_every_kernel_in_warmed_tunecache(tmp_path):
+    """Acceptance: one card per kernel present in a warmed tunecache."""
+    root, fp, kernels = _warm_cache(tmp_path)
+    assert len(kernels) >= 2
+    cards = build_cards(cache_root=root, telemetry_patterns=())
+    assert sorted(c["kernel"] for c in cards) == kernels
+    for c in cards:
+        assert "error" not in c
+        assert c["fingerprint"]["key"] == fp.key
+        assert c["fitted"] and c["model"]
+        assert c["n_rows"] > 0 and c["n_buckets"] > 0
+        assert c["variants"] and c["features"]
+        assert isinstance(c["fit_mape_pct"], float)
+    text = "\n".join(format_cards(cards))
+    for k in kernels:
+        assert f"== {k} @ {fp.key} ==" in text
+
+
+def test_cards_fold_live_telemetry_stats(tmp_path):
+    root, _, kernels = _warm_cache(tmp_path)
+    k = kernels[0]
+    tel = Telemetry()
+    for pred, actual in ((1.0, 1.1), (1.0, 1.3), (2.0, 2.1)):
+        tel.residual(k, pred, actual, fit_band_pct=15.0)
+    tel.count(f"dispatch.by_kernel.{k}.nn", 7)
+    tel.count(f"dispatch.by_kernel.{k}.measured", 2)
+    tel.count(f"gate.by_kernel.{k}.accept", 3)
+    tel.count(f"gate.by_kernel.{k}.reject", 1)
+    path = str(tmp_path / "telemetry_x.json")
+    tel.save(path)
+    card = next(c for c in build_cards(cache_root=root,
+                                       telemetry_patterns=(path,))
+                if c["kernel"] == k)
+    assert card["sources"] == [path]
+    assert card["n_residuals"] == 3
+    # APE is relative to the measured time: |actual - predicted| / actual
+    assert card["live_mape_pct"] == pytest.approx(
+        100 * (0.1 / 1.1 + 0.3 / 1.3 + 0.1 / 2.1) / 3, rel=1e-6)
+    assert card["decisions"] == {"nn": 7, "measured": 2}
+    assert card["gate"]["accept_rate"] == pytest.approx(0.75)
+    cal = card["calibration"]
+    assert cal["window"] == 3
+    assert cal["within_band_frac"] == pytest.approx(2 / 3)
+    assert cal["within_2x_band_frac"] == pytest.approx(1.0)
+
+
+def test_cards_render_error_card_for_stale_entry(tmp_path):
+    fp_dir = tmp_path / "tc" / "someprint"
+    fp_dir.mkdir(parents=True)
+    (fp_dir / "fingerprint.json").write_text(
+        json.dumps({"backend": "sim", "device_kind": "x"}))
+    (fp_dir / "broken.json").write_text(json.dumps({"version": 999}))
+    cards = build_cards(cache_root=str(tmp_path / "tc"),
+                        telemetry_patterns=())
+    assert len(cards) == 1
+    assert cards[0]["kernel"] == "broken"
+    assert "error" in cards[0]
+
+
+# --------------------------------------------------------------------------
+# SLOs: evaluation semantics + report exit codes
+# --------------------------------------------------------------------------
+
+def _serve_telemetry(tmp_path, ttft=0.01, n=20):
+    tel = Telemetry()
+    for i in range(n):
+        tel.observe("serve.ttft_s", ttft * (1 + 0.01 * i))
+        tel.observe("serve.token_latency_s", ttft / 10)
+    path = str(tmp_path / "telemetry_serve.json")
+    tel.save(path)
+    return path
+
+
+def test_evaluate_slos_met_burned_and_no_data(tmp_path):
+    path = _serve_telemetry(tmp_path)
+    doc = Telemetry.load(path)
+    rows = evaluate_slos((SLO("serve.ttft_s", 99, 1.0),
+                          SLO("serve.ttft_s", 50, 1e-6),
+                          SLO("absent.metric", 50, 1.0),
+                          SLO("serve.ttft_s", "mean", 1.0)), doc)
+    assert [r["met"] for r in rows] == [True, False, None, True]
+    assert rows[1]["burn_rate"] > 1.0
+    assert rows[2]["observed"] is None and rows[2]["burn_rate"] is None
+
+
+def test_report_slo_exit_codes(tmp_path, capsys):
+    path = _serve_telemetry(tmp_path)
+    # default serve set: generous targets -> met -> exit 0
+    assert report_main(["report", path, "--slo"]) == 0
+    assert "all evaluated SLOs met" in capsys.readouterr().out
+    # a deliberately violated spec -> exit 1
+    spec = str(tmp_path / "slo.json")
+    with open(spec, "w") as f:
+        json.dump([{"metric": "serve.ttft_s", "percentile": 50,
+                    "target": 1e-9, "name": "impossible"}], f)
+    assert report_main(["report", path, "--slo", spec]) == 1
+    assert "SLO BURN" in capsys.readouterr().out
+    # an unloadable spec is tooling failure -> exit 2
+    assert report_main(["report", path, "--slo",
+                        str(tmp_path / "nope.json")]) == 2
+
+
+# --------------------------------------------------------------------------
+# bench history --json
+# --------------------------------------------------------------------------
+
+def test_bench_history_json_flag(tmp_path, capsys):
+    from repro.bench.__main__ import main as bench_main
+    sample = os.path.join(SAMPLE_RESULTS, "bench.json")
+    assert os.path.exists(sample), "committed sample bench doc missing"
+    assert bench_main(["history", sample, "--json"]) == 0
+    rows = json.loads(capsys.readouterr().out)
+    assert isinstance(rows, list) and rows[0]["file"] == sample
+    assert rows[0]["n_workloads"] > 0
+    assert isinstance(rows[0]["geomean_vs_default"], dict)
+
+
+# --------------------------------------------------------------------------
+# dashboard
+# --------------------------------------------------------------------------
+
+SECTION_TITLES = ("SLO status", "Bench history", "Memory ledger",
+                  "Drift timelines", "Predictor model cards")
+
+
+def test_dashboard_renders_offline_from_sample_results():
+    """Acceptance: the committed sample results render a dashboard with
+    every section populated and zero external requests."""
+    assert glob.glob(os.path.join(SAMPLE_RESULTS, "telemetry_*.json"))
+    doc = render_dashboard(results_dir=SAMPLE_RESULTS)
+    for title in SECTION_TITLES:
+        assert f"<h2>{title}</h2>" in doc
+    # self-contained: nothing the browser would fetch
+    for needle in ("http://", "https://", "src=", "@import", "url(",
+                   "<link"):
+        assert needle not in doc, needle
+    assert "no data</p>" not in doc        # every chart populated
+    assert 'class="empty"' not in doc
+    assert doc.count("<svg") >= 3
+    assert 'class="card"' in doc           # model cards present
+    assert "BURNED" not in doc             # sample serve run meets SLOs
+    assert "&#10003; ok" in doc            # ... and says so
+    # drift + memory series made it into charts (polyline marks exist)
+    assert doc.count("<polyline") >= 2
+
+
+def test_dashboard_tolerates_empty_results_dir(tmp_path):
+    out = str(tmp_path / "dash" / "dashboard.html")
+    written = write_dashboard(out, results_dir=str(tmp_path / "nothing"))
+    assert written == out and os.path.exists(out)
+    doc = open(out).read()
+    for title in SECTION_TITLES:
+        assert f"<h2>{title}</h2>" in doc
+    assert 'class="empty"' in doc          # placeholders, not crashes
+    assert not os.path.exists(out + ".tmp")
+
+
+def test_dashboard_cli_writes_file(tmp_path, capsys):
+    out = str(tmp_path / "dashboard.html")
+    rc = report_main(["dashboard", "-o", out,
+                      "--results-dir", SAMPLE_RESULTS])
+    assert rc == 0 and os.path.exists(out)
+    assert f"wrote {out}" in capsys.readouterr().out

@@ -1,0 +1,166 @@
+"""obs.memory: the ref-counted memory ledger — compile-time predicted
+per-device peaks vs runtime-measured peaks (the 1.25x acceptance bound on
+simdev bench workloads), alloc/free ordering invariants, pinned program
+outputs, capacity gating on simulated devices, and the telemetry gauges
+the ledger leaves behind."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import ops, trace
+from repro.obs import (MemoryCapacityError, Telemetry,
+                       predicted_peak_bytes)
+from repro.runtime import (Dispatcher, Fingerprint, TuningCache,
+                           default_registry, seed_from_programs)
+from repro.runtime.simdev import fake_matmul_device
+from repro.workloads import get_workload, suite_registry
+
+BOUND = 1.25     # acceptance: measured peak within 1.25x of predicted
+
+
+def _two_fake_devices(tmp_path, reg, **kw):
+    root = str(tmp_path / "devs")
+    return {"d0": fake_matmul_device(root, "d0", 1e11, reg, **kw),
+            "d1": fake_matmul_device(root, "d1", 1e9, reg, **kw)}
+
+
+def _two_matmul_program(reg):
+    rng = np.random.RandomState(0)
+    with trace(registry=reg) as tb:
+        a = ops.matmul(jnp.asarray(rng.rand(64, 64), jnp.float32),
+                       jnp.asarray(rng.rand(64, 64), jnp.float32))
+        b = ops.matmul(jnp.asarray(rng.rand(256, 256), jnp.float32),
+                       jnp.asarray(rng.rand(256, 256), jnp.float32))
+        tb.mark_output(a, b)
+    return tb
+
+
+# --------------------------------------------------------------------------
+# plan + ledger unit invariants
+# --------------------------------------------------------------------------
+
+def test_memory_plan_counts_duplicate_reads_and_pins_outputs(tmp_path):
+    reg = default_registry(include=["matmul"])
+    rng = np.random.RandomState(0)
+    with trace(registry=reg) as tb:
+        x = jnp.asarray(rng.rand(64, 64), jnp.float32)
+        a = ops.matmul(x, x)
+        b = ops.matmul(a, a)      # duplicate positional dep: two reads
+        tb.mark_output(b)
+    compiled = tb.program.compile(devices=_two_fake_devices(tmp_path, reg))
+    plan = compiled.memory
+    (a_name, b_name) = (n.name for n in tb.program.nodes)
+    home_a = compiled.device_of(a_name)
+    assert plan.reads[(home_a, a_name)] == 2
+    # the program output is pinned on its producing device
+    assert (compiled.device_of(b_name), b_name) in plan.pinned
+
+
+def test_ledger_frees_at_zero_refcount_and_keeps_pinned(tmp_path):
+    reg = default_registry(include=["matmul"])
+    tb = _two_matmul_program(reg)
+    compiled = tb.program.compile(devices=_two_fake_devices(tmp_path, reg),
+                                  bindings=tb.bindings)
+    out = compiled()
+    assert len(out) == 2
+    ledger = compiled.last_memory
+    assert ledger is not None
+    # at run end only the pinned values (program inputs with no further
+    # readers are freed; outputs stay resident) remain live
+    live = ledger.live_bytes()
+    pinned_bytes = {}
+    for dev, val in ledger.plan.pinned:
+        if val in ledger.plan.node_allocs:
+            nb = ledger.plan.node_allocs[val][1]
+        else:
+            nb = {v: n for d, v, n in ledger.plan.input_allocs}[val]
+        pinned_bytes[dev] = pinned_bytes.get(dev, 0) + nb
+    assert {d: v for d, v in live.items() if v} == pinned_bytes
+    # peaks never below the end-state live bytes
+    for dev, v in pinned_bytes.items():
+        assert ledger.peak_bytes()[dev] >= v
+
+
+# --------------------------------------------------------------------------
+# predicted vs measured
+# --------------------------------------------------------------------------
+
+def test_sequential_measured_peak_equals_predicted(tmp_path):
+    reg = default_registry(include=["matmul"])
+    tel = Telemetry()
+    tb = _two_matmul_program(reg)
+    compiled = tb.program.compile(
+        devices=_two_fake_devices(tmp_path, reg), telemetry=tel,
+        bindings=tb.bindings)
+    assert compiled.predicted_peak_bytes      # per-device, non-empty
+    compiled()
+    measured = compiled.last_memory.peak_bytes()
+    assert measured == compiled.predicted_peak_bytes
+    # the run left the gauge series behind
+    for dev in measured:
+        assert tel.series(f"mem.peak_bytes.{dev}")
+        assert tel.series(f"mem.predicted_peak_bytes.{dev}")
+        assert tel.series(f"mem.live_bytes.{dev}")
+
+
+@pytest.mark.parametrize("workload", ["mixed_dag", "mlp_block"])
+@pytest.mark.parametrize("executor", ["sequential", "async"])
+def test_bench_workload_peak_within_accepted_bound(tmp_path, workload,
+                                                   executor):
+    """Acceptance: on simdev bench workloads the measured per-device peak
+    stays within 1.25x of the compile-time predicted peak (both ways)."""
+    wl = get_workload(workload)
+    reg = suite_registry([workload])
+    built = wl.build("small", registry=reg)
+    devices = {}
+    for name, speed in (("d0", 4.0e7), ("d1", 3.0e7)):
+        fp = Fingerprint("sim", f"bench-{name}", 1, 1, ("float32",))
+        cache = TuningCache(root=str(tmp_path / "sim"), fingerprint=fp)
+        d = Dispatcher(registry=reg, cache=cache)
+        seed_from_programs(d, [built.program], speed, reset=True)
+        devices[name] = d
+    compiled = built.program.compile(devices=devices,
+                                     bindings=built.bindings,
+                                     executor=executor)
+    compiled()
+    predicted = compiled.predicted_peak_bytes
+    measured = compiled.last_memory.peak_bytes()
+    assert set(measured) <= set(predicted)
+    for dev, m in measured.items():
+        p = predicted[dev]
+        assert p > 0 and m > 0
+        assert m <= BOUND * p, (dev, m, p)
+        assert m >= p / BOUND, (dev, m, p)
+
+
+def test_predicted_peak_replay_matches_compile(tmp_path):
+    """``predicted_peak_bytes`` is a pure function of (plan, order): a
+    second replay off the compiled artifacts reproduces the stored one."""
+    reg = default_registry(include=["matmul"])
+    compiled = _two_matmul_program(reg).program.compile(
+        devices=_two_fake_devices(tmp_path, reg))
+    again = predicted_peak_bytes(compiled.memory, compiled.order,
+                                 compiled.buffers)
+    assert again == compiled.predicted_peak_bytes
+
+
+# --------------------------------------------------------------------------
+# capacity gating
+# --------------------------------------------------------------------------
+
+def test_over_capacity_placement_raises_typed_error(tmp_path):
+    reg = default_registry(include=["matmul"])
+    devices = _two_fake_devices(tmp_path, reg, capacity_bytes=1024)
+    with pytest.raises(MemoryCapacityError) as ei:
+        _two_matmul_program(reg).program.compile(devices=devices)
+    err = ei.value
+    assert err.device in devices
+    assert err.predicted_bytes > err.capacity_bytes == 1024
+
+
+def test_capacity_roomy_enough_compiles(tmp_path):
+    reg = default_registry(include=["matmul"])
+    devices = _two_fake_devices(tmp_path, reg, capacity_bytes=1 << 30)
+    compiled = _two_matmul_program(reg).program.compile(devices=devices)
+    for dev, peak in compiled.predicted_peak_bytes.items():
+        assert peak <= (1 << 30)

@@ -163,6 +163,70 @@ def test_telemetry_save_load_summary_identical(tmp_path):
     assert summarize_doc(Telemetry.load(path)) == tel.summary()
 
 
+def test_telemetry_save_is_atomic(tmp_path, monkeypatch):
+    """A failed save never corrupts an existing file (temp + rename)."""
+    path = str(tmp_path / "tel.json")
+    tel = Telemetry(run_id="keep")
+    tel.count("ok", 1)
+    tel.save(path)
+    before = open(path).read()
+    bad = Telemetry(run_id="torn")
+    monkeypatch.setattr(Telemetry, "to_json",
+                        lambda self: (_ for _ in ()).throw(RuntimeError()))
+    with pytest.raises(RuntimeError):
+        bad.save(path)
+    assert open(path).read() == before       # original intact
+    monkeypatch.undo()
+    bad.save(path)                            # and a clean retry lands
+    assert Telemetry.load(path)["run_id"] == "torn"
+    assert not (tmp_path / "tel.json.tmp").exists()
+
+
+def test_telemetry_concurrent_writers_lose_nothing(tmp_path):
+    """Stress the shared-state surfaces from many threads: counters sum
+    exactly, every gauge/histogram/residual point lands, and concurrent
+    ``to_json``/``save`` snapshots never crash or tear."""
+    import threading
+
+    tel = Telemetry(run_id="stress", drift=DriftConfig(min_obs=1))
+    n_threads, n_iter = 8, 200
+    errors = []
+
+    def hammer(i):
+        try:
+            for j in range(n_iter):
+                tel.count("shared.counter")
+                tel.count(f"per.thread.{i}", 2)
+                tel.gauge(f"gauge.{i}", float(j))
+                tel.observe("hist.s", 1e-3 * (j + 1))
+                tel.residual("stress", 1.0, 1.1, fit_band_pct=50.0)
+                if j % 50 == 0:
+                    tel.to_json()
+                    tel.save(str(tmp_path / f"snap_{i}.json"))
+        except BaseException as e:          # noqa: BLE001
+            errors.append(e)
+
+    threads = [threading.Thread(target=hammer, args=(i,))
+               for i in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors
+    c = tel.counters()
+    assert c["shared.counter"] == n_threads * n_iter
+    for i in range(n_threads):
+        assert c[f"per.thread.{i}"] == 2 * n_iter
+        assert len(tel.series(f"gauge.{i}")) == n_iter
+    doc = tel.to_json()
+    assert doc["histograms"]["hist.s"]["count"] == n_threads * n_iter
+    assert summarize_doc(doc)["drift"]["stress"]["n"] == n_threads * n_iter
+    # the final save loads back as the same document shape
+    tel.save(str(tmp_path / "final.json"))
+    assert Telemetry.load(
+        str(tmp_path / "final.json"))["run_id"] == "stress"
+
+
 def test_null_telemetry_is_inert():
     NULL_TELEMETRY.count("x")
     NULL_TELEMETRY.gauge("g", 1.0)

@@ -207,6 +207,59 @@ class CompiledProgram:
     def device_of(self, node_name: str) -> str:
         return self.assignments[node_name].device
 
+    def task_meta(self) -> dict:
+        """Per-task schedule context carried into every trace event (and
+        so into saved Chrome documents): kernel, shape bucket, planned
+        lane, the EFT's predicted start/finish (model units), the
+        predicted duration in *wall* units (sim dispatchers sleep
+        ``predicted * time_scale``, so misprediction attribution compares
+        like with like), and the planned device's fit-time error band for
+        the kernel when its cache entry carries one.  Built once per
+        compiled program; ``repro.obs.explain`` reads it back out of the
+        trace."""
+        metas = getattr(self, "_task_metas", None)
+        if metas is not None:
+            return metas
+        metas = {}
+        for kt in self.order:
+            a: Assignment = self.assignments[kt.name]
+            disp = self.dispatchers[a.device]
+            m = {"kernel": kt.kernel,
+                 "shape_bucket": str(shape_bucket(kt.params)),
+                 "planned": a.device,
+                 "predicted_s": (a.finish - a.start)
+                 * self._wall_scale(disp),
+                 "predicted_start_s": float(a.start),
+                 "predicted_finish_s": float(a.finish)}
+            try:
+                band = disp._entry(kt.kernel).fit_mape
+                if band is not None:
+                    m["fit_band_pct"] = float(band)
+            except Exception:
+                pass
+            metas[kt.name] = m
+        for tr in self.transfers:
+            m = {"kernel": "transfer", "src": tr.src, "dst": tr.dst,
+                 "nbytes": int(tr.nbytes), "planned": tr.lane}
+            if self.comm is not None:
+                try:
+                    m["predicted_s"] = float(
+                        self.comm(tr.src, tr.dst, tr.nbytes))
+                except Exception:
+                    pass
+            metas[tr.name] = m
+        self._task_metas = metas
+        return metas
+
+    def explain(self):
+        """Causal critical-path analysis of the last execution (see
+        ``repro.obs.explain.analyze_trace``)."""
+        from repro.obs.explain import analyze_trace
+        if self.last_trace is None or not self.last_trace.events:
+            raise ValueError("no execution recorded yet — call the "
+                             "compiled program first")
+        return analyze_trace(self.last_trace)
+
     def gantt(self) -> list[dict]:
         """Schedule rows (sorted by predicted start) for reports/CSV."""
         rows = []
@@ -277,6 +330,7 @@ class CompiledProgram:
         self.last_trace = tracer
         tracer.set_epoch(time.perf_counter())
         node_by = {n.name: n for n in self.program.nodes}
+        metas = self.task_meta()
         landed: set = set()
         for task in self.order:
             node = node_by[task.name]
@@ -295,7 +349,10 @@ class CompiledProgram:
             t0 = time.perf_counter()
             env[task.name] = self.dispatchers[dev].dispatch(
                 node.kernel, *(env[d] for d in node.deps), **node.kwargs)
-            tracer.record(task.name, "compute", dev, t0, time.perf_counter())
+            tracer.record(task.name, "compute", dev, t0,
+                          time.perf_counter(),
+                          deps=tuple(d for d in node.deps if d in node_by),
+                          meta=metas.get(task.name))
             if ledger is not None:
                 ledger.node_done(task.name)
 
@@ -378,6 +435,7 @@ class CompiledProgram:
         node_by = {n.name: n for n in self.program.nodes}
         node_names = frozenset(node_by)
         kt_by = {t.name: t for t in self.order}
+        metas = self.task_meta()
         tasks: list[ExecTask] = []
         for tr in self.buffers.transfers:
             from_node = tr.value in node_by
@@ -402,7 +460,8 @@ class CompiledProgram:
                     tr, nbytes=value_nbytes(shape, dtype))
                 return self.transfer(v, live)
             tasks.append(ExecTask(tr.name, tr.lane, move, deps,
-                                  kind="transfer", priority=prio))
+                                  kind="transfer", priority=prio,
+                                  meta=metas.get(tr.name)))
         for task in self.order:
             node = node_by[task.name]
             dev = self.assignments[task.name].device
@@ -456,7 +515,7 @@ class CompiledProgram:
             tasks.append(ExecTask(node.name, dev, run, tuple(deps),
                                   kind="compute",
                                   priority=self.assignments[node.name].start,
-                                  **extra))
+                                  meta=metas.get(node.name), **extra))
         return tasks
 
     @staticmethod

@@ -13,6 +13,24 @@ from __future__ import annotations
 SPEEDUP_KEYS = ("speedup_vs_worst", "speedup_vs_default")
 
 
+def _top_bottleneck(doc: dict):
+    """The document's dominant makespan bucket across every schema-5
+    ``attribution`` block (workloads x configs + adaptive), or None."""
+    buckets: dict = {}
+    atts = [r.get("attribution")
+            for w in doc.get("workloads", {}).values()
+            if isinstance(w, dict)
+            for r in (w.get("configs") or {}).values()
+            if isinstance(r, dict)]
+    atts.append((doc.get("adaptive") or {}).get("attribution"))
+    for att in atts:
+        if isinstance(att, dict):
+            for b, v in (att.get("buckets") or {}).items():
+                if isinstance(v, (int, float)):
+                    buckets[b] = buckets.get(b, 0.0) + float(v)
+    return max(buckets, key=buckets.get) if buckets else None
+
+
 REAL_SLACK = 3.0        # real-hardware MAPE thresholds get this factor;
                         # sim configs are held tight
 
@@ -133,6 +151,12 @@ def compare_docs(baseline: dict, new: dict, rel_tol: float = 0.10,
         elif new_ad and not old_ad:
             notes.append("adaptive section new (absent in baseline) — "
                          "not compared")
+
+    # a shifted dominant bucket is a structural change worth a note (not a
+    # regression: attribution shape has no better/worse ordering)
+    old_tb, new_tb = _top_bottleneck(baseline), _top_bottleneck(new)
+    if old_tb is not None and new_tb is not None and old_tb != new_tb:
+        notes.append(f"top bottleneck shifted: {old_tb} -> {new_tb}")
     return regressions, notes
 
 

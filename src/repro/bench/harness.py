@@ -123,6 +123,19 @@ def _device_mape(cache: TuningCache) -> dict:
 # per-workload measurement
 # --------------------------------------------------------------------------
 
+def _attribution_of(trace):
+    """Compact critical-path attribution of one executed trace (schema-5
+    ``attribution`` block), or None when the trace can't be analyzed."""
+    from repro.obs.explain import analyze_trace, summarize_attribution
+    try:
+        if trace is None or not trace.events:
+            return None
+        doc = summarize_attribution(analyze_trace(trace))
+        return doc if doc["buckets"] else None
+    except Exception:
+        return None    # attribution is best-effort decoration on bench.json
+
+
 def _run_workload(name: str, built, cfg: dict, reps: int) -> dict:
     from repro.obs import Telemetry
 
@@ -195,6 +208,9 @@ def _run_workload(name: str, built, cfg: dict, reps: int) -> dict:
         "overhead": overhead,
         "mape": {k: float(np.mean(v)) for k, v in sorted(mapes.items())},
         "telemetry": telemetry_section,
+        # why the best-mode run took as long as it did: the critical-path
+        # attribution of its last executed trace (None on trace-less runs)
+        "attribution": _attribution_of(compiled["best"].last_trace),
     }
 
 
@@ -375,6 +391,9 @@ def run_adaptive(quick: bool = False, results_dir: str = "results",
             if "exec_trace" in trace_name else "telemetry_adaptive.json")
         last_tel.save(tel_path)
         section["telemetry_path"] = tel_path
+        att = _attribution_of(last_trace)
+        if att is not None:
+            section["attribution"] = att
     return section
 
 

@@ -31,7 +31,7 @@ def discover(patterns=DEFAULT_PATTERNS) -> list:
 
 
 def load_row(path: str) -> dict:
-    """One history row from a bench document, tolerant across schema 1-4.
+    """One history row from a bench document, tolerant across schema 1-5.
 
     Unreadable or non-bench files yield ``{"file", "error"}`` so the
     table can show them without aborting the rest."""
@@ -59,7 +59,26 @@ def load_row(path: str) -> dict:
         for k in ((r.get("telemetry") or {}).get("drift_flags") or ())})
     ad = doc.get("adaptive") or {}
     sv = doc.get("serve") or {}
+    # schema-5 attribution blocks, aggregated: the run's dominant makespan
+    # bucket across every workload x config (plus the adaptive run)
+    buckets: dict = {}
+    atts = [r.get("attribution")
+            for w in doc["workloads"].values() if isinstance(w, dict)
+            for r in (w.get("configs") or {}).values()
+            if isinstance(r, dict)]
+    atts.append(ad.get("attribution"))
+    for att in atts:
+        if isinstance(att, dict):
+            for b, v in (att.get("buckets") or {}).items():
+                if isinstance(v, (int, float)):
+                    buckets[b] = buckets.get(b, 0.0) + float(v)
+    top_bottleneck = None
+    if buckets:
+        top = max(buckets, key=buckets.get)
+        top_bottleneck = {"bucket": top,
+                          "share": buckets[top] / sum(buckets.values())}
     return {
+        "top_bottleneck": top_bottleneck,
         "serve_sjf_wins": sv.get("sjf_beats_fifo_bursty"),
         "file": path,
         "schema": doc.get("schema"),
@@ -100,6 +119,11 @@ def format_history(rows: list) -> list:
         if r.get("serve_sjf_wins") is not None:
             lines.append(f"{'':36s} serve: SJF beats FIFO on bursty: "
                          + ("yes" if r["serve_sjf_wins"] else "NO"))
+        tb = r.get("top_bottleneck")
+        if isinstance(tb, dict):
+            lines.append(f"{'':36s} bottleneck: {tb['bucket']} "
+                         f"({100 * tb['share']:.0f}% of attributed "
+                         f"makespan)")
         for flag in r["drift_flags"]:
             lines.append(f"{'':36s} drift: {flag}")
     return lines

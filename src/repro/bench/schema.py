@@ -85,13 +85,33 @@ arrival-trace scenario (``python -m repro.bench serve``)::
               "admission_fallback": bool}}}},
         "sjf_beats_fifo_bursty": bool,    # p99 OR mean TTFT improved
         "telemetry_path": str}            # saved obs.Telemetry JSON
+
+Schema 5 adds the *optional* ``attribution`` block — the compact
+``repro.obs.explain`` summary (critical-path makespan attribution) —
+in two places::
+
+      # per workload x config, next to "telemetry":
+      "attribution": {
+        "makespan_s": float,
+        "residual_frac": float,           # |makespan - sum(buckets)| share
+        "buckets": {bucket: seconds},     # compute.<kernel>/transfer.<lane>
+                                          #   /queue.<lane>/overhead.*
+        "top_bottleneck": str,            # largest bucket
+        "critical_path_len": int, "n_steals": int,
+        "top_misprediction":              # worst-ranked (kernel, bucket)
+          null | {"kernel": str, "shape_bucket": str, "cost_s": float,
+                   "ape_pct": float, "fit_band_pct": float|null,
+                   "exceeds_fit_band": bool, "lanes": [str, ...]}}
+
+      # inside "adaptive": the same block for the traced adaptive run
+      "attribution": {...}
 """
 from __future__ import annotations
 
 import json
 
-BENCH_SCHEMA_VERSION = 4
-ACCEPTED_SCHEMAS = (1, 2, 3, 4)
+BENCH_SCHEMA_VERSION = 5
+ACCEPTED_SCHEMAS = (1, 2, 3, 4, 5)
 MODES = ("best", "default", "worst")
 
 
@@ -108,6 +128,33 @@ def _num(doc, path, key, lo=None):
     if lo is not None:
         _require(v >= lo, f"{path}.{key}", f"expected >= {lo}, got {v}")
     return float(v)
+
+
+def _validate_attribution(att, path: str) -> None:
+    _require(isinstance(att, dict), path, "expected an object")
+    _num(att, path, "makespan_s", lo=0)
+    _num(att, path, "residual_frac", lo=0)
+    buckets = att.get("buckets")
+    _require(isinstance(buckets, dict) and buckets, f"{path}.buckets",
+             "expected a non-empty object")
+    for b, v in buckets.items():
+        _num(buckets, f"{path}.buckets", b, lo=0)
+    _require(att.get("top_bottleneck") in buckets,
+             f"{path}.top_bottleneck", "expected a key of .buckets")
+    _num(att, path, "critical_path_len", lo=1)
+    _num(att, path, "n_steals", lo=0)
+    top = att.get("top_misprediction")
+    if top is not None:
+        tp = f"{path}.top_misprediction"
+        _require(isinstance(top, dict), tp, "expected an object or null")
+        _require(isinstance(top.get("kernel"), str), f"{tp}.kernel",
+                 "expected a string")
+        _num(top, tp, "cost_s")
+        _num(top, tp, "ape_pct", lo=0)
+        _require(isinstance(top.get("exceeds_fit_band"), bool),
+                 f"{tp}.exceeds_fit_band", "expected bool")
+        _require(isinstance(top.get("lanes"), list), f"{tp}.lanes",
+                 "expected a list")
 
 
 def validate_bench(doc: dict) -> dict:
@@ -192,6 +239,11 @@ def validate_bench(doc: dict) -> dict:
                 for k in tel["drift_flags"]:
                     _require(isinstance(k, str), f"{tp}.drift_flags",
                              "expected kernel-name strings")
+            att = r.get("attribution")
+            if att is not None:             # optional, schema-5 only
+                _require(doc["schema"] >= 5, f"{cp}.attribution",
+                         "attribution section requires schema >= 5")
+                _validate_attribution(att, f"{cp}.attribution")
 
     geo = doc.get("geomean")
     _require(isinstance(geo, dict) and geo, "$.geomean",
@@ -233,6 +285,11 @@ def validate_bench(doc: dict) -> dict:
                      "telemetry_path requires schema >= 3")
             _require(isinstance(ad["telemetry_path"], str),
                      "$.adaptive.telemetry_path", "expected a string")
+        if ad.get("attribution") is not None:       # optional, schema-5
+            _require(doc["schema"] >= 5, "$.adaptive.attribution",
+                     "attribution section requires schema >= 5")
+            _validate_attribution(ad["attribution"],
+                                  "$.adaptive.attribution")
 
     sv = doc.get("serve")
     if sv is not None:                  # optional, schema-4 only

@@ -70,6 +70,9 @@ class ExecTask:
     #   device -> predicted seconds, consulted at decision time
     inputs: tuple = ()              # (value, home device, nbytes) triples
     #   priced through comm when running away from the inputs' homes
+    meta: Optional[Mapping] = None  # schedule context carried into the
+    #   trace event (kernel, shape bucket, predicted seconds) — what
+    #   repro.obs.explain attributes makespan with
 
 
 @dataclasses.dataclass(frozen=True)
@@ -387,7 +390,10 @@ class AsyncExecutor:
                 if self.tracer is not None:
                     self.tracer.record(task.name, task.kind, lane, t0, t1,
                                        note=f"stolen:{task.device}->{lane}"
-                                       if stolen else "")
+                                       if stolen else "",
+                                       deps=task.deps,
+                                       meta=dict(task.meta)
+                                       if task.meta else None)
                 if tel is not None:
                     tel.count(f"exec.{task.kind}_done")
                 if self.observe is not None and task.kind == "compute":

@@ -25,6 +25,15 @@ merges that telemetry in: gauge series become Chrome counter tracks
 ("C" events — queue depths, rolling MAPE) and telemetry span/instant
 events land on a dedicated ``telemetry`` thread row, all on the shared
 clock next to the task slices.
+
+Each event also carries its *causality*: ``deps`` (the names of the
+tasks it waited on) and ``meta`` (free-form schedule context — kernel,
+shape bucket, predicted seconds — attached by ``api.compile_``).  The
+Chrome export embeds both in ``args`` and additionally emits flow events
+("s"/"f" arrow pairs) along every dependency edge, so Perfetto draws the
+critical chain instead of just lanes; ``from_chrome`` rebuilds a trace
+from a saved document, which is how ``repro.obs.explain`` analyzes
+traces long after the run that produced them.
 """
 from __future__ import annotations
 
@@ -42,6 +51,10 @@ class TraceEvent:
     begin_s: float
     end_s: float
     note: str = ""              # steal annotation ("planned->actual", ...)
+    deps: tuple = ()            # names of the tasks this one waited on
+    meta: Optional[dict] = None  # schedule context (kernel, shape bucket,
+    #   predicted seconds, ...) — attached by the lowering, read by
+    #   repro.obs.explain
 
     @property
     def dur_s(self) -> float:
@@ -64,10 +77,12 @@ class ExecutionTrace:
             self.epoch = float(t)
 
     def record(self, name: str, kind: str, device: str,
-               begin_s: float, end_s: float, note: str = "") -> None:
+               begin_s: float, end_s: float, note: str = "",
+               deps: tuple = (), meta: Optional[dict] = None) -> None:
         with self._lock:
             self.events.append(TraceEvent(name, kind, device,
-                                          begin_s, end_s, note))
+                                          begin_s, end_s, note,
+                                          tuple(deps), meta))
 
     # -- summaries -----------------------------------------------------------
     @property
@@ -110,12 +125,23 @@ class ExecutionTrace:
         events — queue depth, rolling MAPE render as graphs above the
         lanes) and telemetry instants/spans land on one extra
         ``telemetry`` thread row (refits, gate rejections next to the
-        steal instants and task slices they explain)."""
+        steal instants and task slices they explain).
+
+        Task events embed ``deps``/``meta`` in ``args`` and every
+        dependency edge additionally emits one flow-event pair ("s" at
+        the producer's end, "f" with ``bp:"e"`` at the consumer's begin),
+        so Perfetto renders the causal arrows and ``from_chrome`` can
+        rebuild the full dependency DAG from the saved file."""
         t0 = self.t0
         lanes = {d: i for i, d in enumerate(self.devices())}
         events = [{"name": "thread_name", "ph": "M", "pid": 0, "tid": tid,
                    "cat": "__metadata", "args": {"name": d}}
                   for d, tid in lanes.items()]
+        spans = {}                      # first span recorded per task name
+        for e in self.by_start():
+            if e.kind != "steal":
+                spans.setdefault(e.name, e)
+        flow_id = 0
         for e in self.by_start():
             if e.kind == "steal":
                 # re-dispatch decisions are instants, not spans
@@ -127,12 +153,65 @@ class ExecutionTrace:
                       "pid": 0, "tid": lanes[e.device],
                       "ts": (e.begin_s - t0) * 1e6,
                       "dur": e.dur_s * 1e6}
+            args: dict = {}
             if e.note:
-                ev["args"] = {"note": e.note}
+                args["note"] = e.note
+            if e.deps:
+                args["deps"] = list(e.deps)
+            if e.meta:
+                args["meta"] = dict(e.meta)
+            if args:
+                ev["args"] = args
             events.append(ev)
+            if e.kind == "steal":
+                continue
+            for d in e.deps:
+                src = spans.get(d)
+                if src is None:
+                    continue
+                flow_id += 1
+                events.append({"name": "dep", "cat": "flow", "ph": "s",
+                               "id": flow_id, "pid": 0,
+                               "tid": lanes[src.device],
+                               "ts": (src.end_s - t0) * 1e6})
+                events.append({"name": "dep", "cat": "flow", "ph": "f",
+                               "bp": "e", "id": flow_id, "pid": 0,
+                               "tid": lanes[e.device],
+                               "ts": (e.begin_s - t0) * 1e6})
         if telemetry is not None:
             events += self._telemetry_events(telemetry, t0, len(lanes))
         return {"traceEvents": events, "displayTimeUnit": "ms"}
+
+    @classmethod
+    def from_chrome(cls, doc: dict) -> "ExecutionTrace":
+        """Rebuild a trace from a saved Chrome document (epoch 0, times in
+        seconds relative to the original run epoch).  Task spans, steal
+        instants, deps, and meta round-trip; telemetry counter tracks and
+        instants merged by ``to_chrome(telemetry=...)`` are skipped —
+        they are not task events."""
+        tid_names = {}
+        for ev in doc.get("traceEvents", ()):
+            if ev.get("ph") == "M" and ev.get("name") == "thread_name":
+                tid_names[ev.get("tid")] = \
+                    (ev.get("args") or {}).get("name", str(ev.get("tid")))
+        tr = cls(epoch=0.0)
+        for ev in doc.get("traceEvents", ()):
+            ph, cat = ev.get("ph"), ev.get("cat")
+            lane = tid_names.get(ev.get("tid"), str(ev.get("tid")))
+            args = ev.get("args") or {}
+            if ph == "X" and cat in ("compute", "transfer"):
+                b = float(ev["ts"]) / 1e6
+                tr.record(ev["name"], cat, lane, b,
+                          b + float(ev.get("dur", 0.0)) / 1e6,
+                          note=args.get("note", ""),
+                          deps=tuple(args.get("deps", ())),
+                          meta=dict(args["meta"])
+                          if args.get("meta") else None)
+            elif ph == "i" and cat == "steal":
+                t = float(ev["ts"]) / 1e6
+                tr.record(ev["name"], "steal", lane, t, t,
+                          note=args.get("note", ""))
+        return tr
 
     @staticmethod
     def _telemetry_events(telemetry, t0: float, tid: int) -> list:

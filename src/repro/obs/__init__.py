@@ -18,10 +18,23 @@ compile-time predicted peak, model cards (``obs.cards``) fold tunecache
 coverage with live accuracy per predictor, SLOs (``obs.slo``) price
 latency objectives with burn rates, and ``obs.dashboard`` renders it all
 as one self-contained static HTML file.
+
+The third layer asks *why*: ``obs.explain`` reconstructs the dependency
+DAG from an execution trace, computes the realized critical path and
+per-task slack, partitions the makespan into compute/transfer/queue/
+overhead buckets, diffs against the frozen EFT schedule's predicted
+path, and ranks (kernel, shape-bucket) pairs by the makespan-seconds
+their prediction error cost — plus per-request serve TTFT waterfalls
+from the engine's trace-ID instants (``python -m repro.obs explain``).
 """
 from repro.obs.cards import build_cards, format_cards
 from repro.obs.dashboard import render_dashboard, write_dashboard
 from repro.obs.drift import DriftConfig, DriftMonitor
+from repro.obs.explain import (EXPLAIN_SCHEMA_VERSION, analyze_chrome,
+                               analyze_trace, format_explain,
+                               format_waterfalls, lane_utilization,
+                               summarize_attribution,
+                               waterfalls_from_telemetry)
 from repro.obs.memory import (MemoryCapacityError, MemoryLedger, MemoryPlan,
                               check_capacity, memory_plan,
                               predicted_peak_bytes)

@@ -484,6 +484,78 @@ def _drift_section(docs: dict) -> str:
              f"({os.path.basename(path)})")
 
 
+def _explain_section(results_dir: str) -> str:
+    """Makespan attribution of the freshest saved execution trace:
+    critical-path bucket columns, the misprediction ranking, and per-lane
+    utilization — the ``obs.explain`` analysis rendered standing."""
+    import glob as _glob
+    import json as _json
+
+    from repro.obs.explain import analyze_chrome
+    paths = sorted(_glob.glob(os.path.join(results_dir,
+                                           "exec_trace*.json")),
+                   key=lambda p: os.path.getmtime(p), reverse=True)
+    analysis = path = None
+    for p in paths:
+        try:
+            with open(p) as f:
+                doc = analyze_chrome(_json.load(f))
+        except (OSError, ValueError, KeyError):
+            continue
+        if not doc.get("empty"):
+            analysis, path = doc, p
+            break
+    if analysis is None:
+        return _section("Makespan attribution",
+                        '<p class="empty">no analyzable execution trace '
+                        'found</p>')
+    buckets = analysis["buckets"]
+    names = list(buckets)[:MAX_SERIES]
+    bars = _grouped_columns(
+        names, ["seconds"], [[buckets[b]] for b in names],
+        y_fmt=lambda v: f"{v * 1e3:.3g}ms")
+    cp = analysis["critical_path"]
+    summary = (f'<p class="sub">makespan {analysis["makespan_s"] * 1e3:.2f}'
+               f' ms over {analysis["n_tasks"]} tasks '
+               f'({analysis["n_steals"]} steals) &middot; top bottleneck '
+               f'<b>{_esc(analysis["top_bottleneck"])}</b> &middot; '
+               f'critical path {len(cp)} links &middot; attribution '
+               f'residual {100 * analysis["residual_frac"]:.3f}%</p>')
+    mis_rows = [[g["kernel"], g["shape_bucket"],
+                 f'{g["cost_s"] * 1e3:.2f} ms', f'{g["ape_pct"]:.1f}%',
+                 f'{g["fit_band_pct"]:.1f}%'
+                 if isinstance(g.get("fit_band_pct"), (int, float))
+                 else "-",
+                 ",".join(g["lanes"]),
+                 "EXCEEDS" if g["exceeds_fit_band"] else "ok"]
+                for g in analysis["mispredictions"]]
+    mis = ""
+    if mis_rows:
+        head = "".join(f"<th>{h}</th>" for h in
+                       ("kernel", "shape bucket", "makespan cost", "ape",
+                        "fit band", "lanes", "band"))
+        body = "".join("<tr>" + "".join(f"<td>{_esc(c)}</td>" for c in r)
+                       + "</tr>" for r in mis_rows)
+        mis = ("<h2>misprediction attribution (critical chain)</h2>"
+               f"<table><tr>{head}</tr>{body}</table>")
+    lane_rows = [[lane, u["n_tasks"], f'{100 * u["busy_frac"]:.1f}%',
+                  f'{100 * u["wait_frac"]:.1f}%',
+                  f'{100 * u["idle_frac"]:.1f}%']
+                 for lane, u in sorted(analysis["lanes"].items())]
+    lanes = _table(["lane", "tasks", "busy", "wait", "idle"], lane_rows)
+    return _section(
+        "Makespan attribution",
+        summary + bars
+        + _table(["bucket", "seconds", "share"],
+                 [[b, f"{v:.6f}",
+                   f"{100 * v / max(analysis['makespan_s'], 1e-12):.1f}%"]
+                  for b, v in buckets.items()])
+        + mis + lanes,
+        note=f"critical-path attribution of "
+             f"{os.path.basename(path)} — where the realized makespan "
+             f"went, and which mispredictions cost schedule time")
+
+
 def _cards_section(cards: list) -> str:
     if not cards:
         return _section("Predictor model cards",
@@ -549,6 +621,7 @@ def render_dashboard(results_dir: str = "results",
         _bench_section(results_dir),
         _memory_section(docs),
         _drift_section(docs),
+        _explain_section(results_dir),
         _cards_section(cards),
     ])
     when = time.strftime("%Y-%m-%d %H:%M:%S", time.localtime())

@@ -1,11 +1,14 @@
-"""``python -m repro.obs {report,cards,dashboard}`` — the obs CLI.
+"""``python -m repro.obs {report,cards,dashboard,explain}`` — the obs CLI.
 
     PYTHONPATH=src python -m repro.obs report results/telemetry_adaptive.json
     PYTHONPATH=src python -m repro.obs report results/telemetry_*.json --check
     PYTHONPATH=src python -m repro.obs report results/telemetry_serve.json \\
         --slo [slo_spec.json]
+    PYTHONPATH=src python -m repro.obs report results/telemetry_adaptive.json \\
+        --trace results/exec_trace_adaptive.json
     PYTHONPATH=src python -m repro.obs cards [--json]
     PYTHONPATH=src python -m repro.obs dashboard -o results/dashboard.html
+    PYTHONPATH=src python -m repro.obs explain results/exec_trace_adaptive.json
 
 ``report`` prints the standing summary (decision counts, histogram
 percentiles, overhead fractions, drift status) as text or ``--json``.
@@ -14,11 +17,22 @@ kernel's live MAPE exceeds ``--factor`` (default 2.0) times its
 fit-time band — CI runs it as a non-blocking drift warning.  ``--slo``
 evaluates an SLO set (a JSON spec path, or the default serve set)
 against the loaded telemetry: exit 1 when any evaluated SLO burns.
+``--trace`` additionally prints the per-lane busy/wait/idle utilization
+breakdown of saved Chrome execution traces.
 Exit 2 means a file could not be loaded (tooling, not drift/burn).
 
 ``cards`` renders one predictor model card per (kernel, fingerprint) in
 the tunecache (``obs.cards``); ``dashboard`` writes the self-contained
 static HTML dashboard (``obs.dashboard``).
+
+``explain`` runs the causal critical-path analysis (``obs.explain``) on
+saved artifacts: Chrome execution traces get makespan attribution
+(critical path, buckets, slack, misprediction ranking), telemetry files
+with serve-request instants get per-request TTFT waterfalls.  ``--json``
+prints the combined document; ``-o`` saves it; ``--check-band`` exits 1
+when the top misprediction's error exceeds its kernel's fit band (CI's
+non-blocking warning hook).  Exit 2 means a file could not be loaded or
+contained no analyzable events.
 """
 from __future__ import annotations
 
@@ -99,6 +113,9 @@ def main(argv=None) -> int:
                     help="evaluate an SLO set against the telemetry and "
                          "exit 1 on any burn; SPEC is a JSON spec file "
                          "(omit it for the default serve SLOs)")
+    rp.add_argument("--trace", nargs="*", default=None, metavar="TRACE",
+                    help="saved Chrome execution trace(s): print each "
+                         "lane's busy/wait/idle utilization breakdown")
 
     cp = sub.add_parser("cards", help="render predictor model cards from "
                                       "the tunecache + saved telemetry")
@@ -120,11 +137,27 @@ def main(argv=None) -> int:
     dp.add_argument("--slo", default=None, metavar="SPEC",
                     help="SLO JSON spec (default: the serve set)")
 
+    ep = sub.add_parser("explain",
+                        help="causal critical-path analysis of saved "
+                             "traces; TTFT waterfalls from telemetry")
+    ep.add_argument("paths", nargs="+",
+                    help="Chrome execution trace and/or telemetry JSON "
+                         "file(s)")
+    ep.add_argument("--json", action="store_true", dest="as_json",
+                    help="print the analysis document instead of text")
+    ep.add_argument("-o", "--out", default=None,
+                    help="also write the analysis document to this path")
+    ep.add_argument("--check-band", action="store_true",
+                    help="exit 1 when the top misprediction's error "
+                         "exceeds its kernel's fit-time band")
+
     args = ap.parse_args(argv)
     if args.cmd == "cards":
         return _cards_main(args)
     if args.cmd == "dashboard":
         return _dashboard_main(args)
+    if args.cmd == "explain":
+        return _explain_main(args)
 
     slos = None
     if args.slo is not None:
@@ -157,9 +190,27 @@ def main(argv=None) -> int:
             if not args.as_json:
                 for line in format_slos(results, path=path):
                     print(line)
+    lane_docs = {}
+    for tpath in (args.trace or ()):
+        from repro.obs.explain import analyze_chrome, format_lanes
+        try:
+            with open(tpath) as f:
+                analysis = analyze_chrome(json.load(f))
+        except (OSError, ValueError, KeyError) as e:
+            print(f"obs report: cannot analyze trace {tpath}: {e}",
+                  file=sys.stderr)
+            return 2
+        lane_docs[tpath] = analysis.get("lanes") or {}
+        if not args.as_json:
+            print(f"-- lane utilization: {tpath} --")
+            for line in format_lanes(lane_docs[tpath]):
+                print(line)
     if args.as_json:
         out = next(iter(summaries.values())) if len(summaries) == 1 \
-            else summaries
+            else dict(summaries)
+        if lane_docs:
+            out = dict(out)
+            out["lane_utilization"] = lane_docs
         print(json.dumps(out, indent=1, sort_keys=True))
     rc = 0
     if args.check:
@@ -176,6 +227,68 @@ def main(argv=None) -> int:
         else:
             print("all evaluated SLOs met")
     return rc
+
+
+def _explain_main(args) -> int:
+    from repro.obs.explain import (analyze_chrome, format_explain,
+                                   format_waterfalls,
+                                   waterfalls_from_telemetry)
+    combined: dict = {"traces": {}, "serve": {}}
+    exceeded: list = []
+    for path in args.paths:
+        try:
+            with open(path) as f:
+                doc = json.load(f)
+        except (OSError, ValueError) as e:
+            print(f"obs explain: cannot load {path}: {e}", file=sys.stderr)
+            return 2
+        if isinstance(doc, dict) and "traceEvents" in doc:
+            try:
+                analysis = analyze_chrome(doc)
+            except (ValueError, KeyError) as e:
+                print(f"obs explain: cannot analyze {path}: {e}",
+                      file=sys.stderr)
+                return 2
+            if analysis.get("empty"):
+                print(f"obs explain: {path}: no task events",
+                      file=sys.stderr)
+                return 2
+            combined["traces"][path] = analysis
+            top = (analysis.get("mispredictions") or [None])[0]
+            if top is not None and top.get("exceeds_fit_band"):
+                exceeded.append(
+                    f"{path}: {top['kernel']}{top['shape_bucket']} cost "
+                    f"{top['cost_s'] * 1e3:.2f} ms, ape "
+                    f"{top['ape_pct']:.1f}% > band "
+                    f"{top['fit_band_pct']:.1f}%")
+            if not args.as_json:
+                for line in format_explain(analysis, path=path):
+                    print(line)
+        elif isinstance(doc, dict) and "obs_schema" in doc:
+            wf = waterfalls_from_telemetry(doc)
+            combined["serve"][path] = wf
+            if not args.as_json:
+                for line in format_waterfalls(wf, path=path):
+                    print(line)
+        else:
+            print(f"obs explain: {path}: neither a Chrome trace nor a "
+                  f"telemetry document", file=sys.stderr)
+            return 2
+    if args.as_json:
+        print(json.dumps(combined, indent=1, sort_keys=True))
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(combined, f, indent=1, sort_keys=True)
+        if not args.as_json:
+            print(f"wrote {args.out}")
+    if args.check_band:
+        if exceeded:
+            print("FIT-BAND EXCEEDED by top misprediction: "
+                  + "; ".join(exceeded))
+            return 1
+        print("fit-band check clean: no top misprediction outside its "
+              "kernel's band")
+    return 0
 
 
 def _cards_main(args) -> int:

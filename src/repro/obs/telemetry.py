@@ -138,6 +138,16 @@ class Telemetry:
                 self._events.append({"name": name, "cat": cat, "ph": "span",
                                      "t0": t0, "t1": t1, "args": args})
 
+    def event(self, name: str, t0: float, t1: float,
+              cat: str = "span", **args) -> None:
+        """Record a span with explicit begin/end — for callers that only
+        know the args *after* the work finished (``span()`` captures its
+        args at entry), e.g. the serve engine's per-step request list."""
+        with self._lock:
+            self._events.append({"name": name, "cat": cat, "ph": "span",
+                                 "t0": float(t0), "t1": float(t1),
+                                 "args": args})
+
     # -- drift ---------------------------------------------------------------
     def residual(self, kernel: str, predicted_s: float, actual_s: float,
                  fit_band_pct: Optional[float] = None) -> None:
@@ -238,6 +248,9 @@ class NullTelemetry(Telemetry):
     @contextlib.contextmanager
     def span(self, name, cat="span", **args):
         yield
+
+    def event(self, name, t0, t1, cat="span", **args):
+        pass
 
     def residual(self, kernel, predicted_s, actual_s, fit_band_pct=None):
         pass

@@ -28,7 +28,13 @@ counters):
   ``serve.requests_rejected``, ``serve.admission_fallback``;
 - ``admission:<rid>`` instants (policy, predicted seconds, queue wait);
 - per-request ``serve.request`` residuals (predicted vs actual service
-  time) feeding the existing ``DriftMonitor``.
+  time) feeding the existing ``DriftMonitor``;
+- a per-request trace-ID thread for ``repro.obs.explain``:
+  ``request.arrival:<rid>`` / ``first_token:<rid>`` /
+  ``request.done:<rid>`` instants plus one ``serve.step`` span per engine
+  iteration whose args list the (rid, slot, phase) of every active
+  request — enough for ``explain`` to rebuild a TTFT waterfall (queue
+  wait / prefill / decode / scheduling overhead) per request.
 
 A cold cache is not an error: ``ColdCacheError`` from the cost model
 demotes admission to FIFO with a ``serve.admission_fallback`` count, and
@@ -105,6 +111,7 @@ class ServeEngine(ContinuousBatcher):
                          stream_kv=stream_kv)
         self.completed: list = []
         self.rejected: list = []
+        self._step_reqs: list = []   # (rid, slot, phase) of the live step
         # KV/slot byte gauges for the memory ledger surface: the cache is
         # preallocated for max_slots, so totals are static per engine;
         # serve.kv_live_bytes tracks the occupied-slot share on
@@ -210,8 +217,22 @@ class ServeEngine(ContinuousBatcher):
             jnp.int32(self.index), jnp.asarray(start))
         return next_tok
 
+    def _assemble(self, active: list) -> np.ndarray:
+        # snapshot who rides this iteration (and in which phase) before
+        # the base class consumes prompt state — the step span records it
+        self._step_reqs = [
+            {"rid": self.slots[i].rid, "slot": i,
+             "phase": "prefill" if self.prompt_left[i] >= 1 else "decode"}
+            for i in active]
+        return super()._assemble(active)
+
     def _execute(self, tokens: np.ndarray) -> np.ndarray:
-        return np.asarray(self._compiled(tokens, self.start.copy()))
+        t0 = time.perf_counter()
+        out = np.asarray(self._compiled(tokens, self.start.copy()))
+        self.telemetry.event(
+            f"engine.step:{self.steps}", t0, time.perf_counter(),
+            cat="serve.step", step=self.steps, requests=self._step_reqs)
+        return out
 
     # -- queue + lifecycle hooks ---------------------------------------------
     def submit(self, req) -> bool:
@@ -222,6 +243,9 @@ class ServeEngine(ContinuousBatcher):
             return False
         if getattr(req, "submitted_s", None) is None:
             req.submitted_s = time.perf_counter()
+        self.telemetry.instant(
+            f"request.arrival:{req.rid}", cat="serve.request", rid=req.rid,
+            prompt=len(req.prompt), max_new=req.max_new)
         if self._split_model is not None:
             req.predicted_s = self._split_model.request_seconds(
                 len(req.prompt), req.max_new)
@@ -247,6 +271,8 @@ class ServeEngine(ContinuousBatcher):
         now = time.perf_counter()
         if first:
             req.first_token_s = now
+            self.telemetry.instant(f"first_token:{req.rid}",
+                                   cat="serve.request", rid=req.rid)
             submitted = getattr(req, "submitted_s", None)
             if submitted is not None:
                 self.telemetry.observe("serve.ttft_s", now - submitted)
@@ -262,6 +288,9 @@ class ServeEngine(ContinuousBatcher):
         now = time.perf_counter()
         req.finished_s = now
         self.completed.append(req)
+        self.telemetry.instant(f"request.done:{req.rid}",
+                               cat="serve.request", rid=req.rid,
+                               tokens=len(req.generated))
         self.telemetry.count("serve.requests_completed")
         admitted = getattr(req, "admitted_s", None)
         predicted = getattr(req, "predicted_s", None)

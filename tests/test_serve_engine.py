@@ -473,7 +473,7 @@ def test_serve_schema_section_validates():
            "external": {},
            "serve": _minimal_serve_section()}
     assert validate_bench(doc) is doc
-    assert BENCH_SCHEMA_VERSION == 4
+    assert BENCH_SCHEMA_VERSION == 5
 
     def broken(mutate):
         bad = copy.deepcopy(doc)
